@@ -1,0 +1,59 @@
+"""Benchmark driver: one function per paper table/figure.
+
+    python -m benchmarks.run [--scale quick|paper] [--only fig8a,...]
+                             [--out results/paper]
+
+Prints ``table,key=value,...`` CSV rows; writes JSON per table.  Roofline
+rows (from dry-run artifacts, if present) are appended at the end.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main(argv=None) -> None:
+    from benchmarks.paper_tables import ALL_TABLES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["quick", "default", "paper"],
+                    default="default")
+    ap.add_argument("--only", default="")
+    ap.add_argument("--out", default="results/paper")
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+    for name, fn in ALL_TABLES.items():
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        rows = fn(scale=args.scale)
+        dt = time.perf_counter() - t0
+        with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+            json.dump(rows, f, indent=1)
+        for row in rows:
+            cells = ",".join(f"{k}={v}" for k, v in row.items())
+            print(f"{name},{cells}")
+        print(f"{name},_wall_s={dt:.1f}", flush=True)
+
+    # roofline table from dry-run artifacts when available
+    try:
+        from benchmarks.roofline import fmt_table, table
+
+        rows = table(args.dryrun_dir, mesh="16x16")
+        if rows:
+            print("\n# Roofline (16x16, from dry-run artifacts)")
+            print(fmt_table(rows))
+            with open(os.path.join(args.out, "roofline.json"), "w") as f:
+                json.dump(rows, f, indent=1)
+    except Exception as e:  # dry-run not yet produced
+        print(f"# roofline skipped: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Rightsize a TPU fleet for a day of LM jobs — the paper's algorithm
+planning capacity for the very jobs this framework trains/serves.
+
+Job demands are measured from the multi-pod dry-run artifacts
+(results/dryrun/*.json) when present; run
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod
+
+first for fully-measured demands, then:
+
+    PYTHONPATH=src python examples/rightsize_fleet.py
+"""
+
+import sys
+
+from repro.launch.rightsize import run
+
+if __name__ == "__main__":
+    run(["--compare"] + sys.argv[1:])

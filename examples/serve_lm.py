@@ -1,0 +1,11 @@
+"""Batched serving example: prefill a prompt batch, decode with KV caches.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma2-9b
+"""
+
+import sys
+
+from repro.launch.serve import run
+
+if __name__ == "__main__":
+    run(sys.argv[1:])

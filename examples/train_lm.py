@@ -1,0 +1,24 @@
+"""End-to-end training driver: train a ~100M-param LM for a few hundred
+steps with fault-tolerant checkpointing.
+
+    PYTHONPATH=src python examples/train_lm.py                  # ~100M
+    PYTHONPATH=src python examples/train_lm.py --quick          # tiny/CI
+
+Re-run with the same --ckpt-dir to resume; --crash-at N demonstrates the
+restart path.
+"""
+
+import sys
+
+from repro.launch.train import run
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if "--quick" in args:
+        args.remove("--quick")
+        args = ["--arch", "qwen2.5-3b", "--preset", "smoke",
+                "--steps", "60", "--seq", "64"] + args
+    else:
+        args = ["--preset", "100m", "--steps", "300", "--batch", "4",
+                "--seq", "256", "--ckpt-every", "50"] + args
+    run(args)

@@ -1,0 +1,4 @@
+"""repro — TL-Rightsizing (IEEE CLOUD 2021) as the capacity-planning layer
+of a multi-pod JAX training/serving framework."""
+
+__version__ = "0.1.0"

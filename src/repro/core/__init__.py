@@ -1,0 +1,47 @@
+"""TL-Rightsizing core (the paper's contribution).
+
+Public API:
+    Problem, NodeTypes, Solution        — data model
+    rightsize, evaluate                 — solve / paper-protocol evaluation
+    penalty_map, lp_map, solve_lp       — mapping strategies
+    two_phase                           — placement engine
+    lp_lowerbound, congestion_lowerbound, no_timeline_lowerbound
+"""
+
+from .problem import (
+    Problem,
+    NodeTypes,
+    trim_timeline,
+    active_mask,
+    feasible_types,
+)
+from .solution import Solution, verify
+from .penalty import (
+    penalty_map,
+    penalty_matrix,
+    relative_demand,
+    min_penalty,
+)
+from .placement import two_phase, TypePool, FIT_POLICIES
+from .lp_map import solve_lp, lp_map, LPResult
+from .lowerbound import (
+    lp_lowerbound,
+    congestion_lowerbound,
+    no_timeline_lowerbound,
+)
+from .api import rightsize, evaluate, ALGORITHMS
+from .local_search import eliminate_nodes
+from .rounding import concentration_rounding
+from .lp_pdhg import solve_lp_pdhg, PDHGResult
+
+__all__ = [
+    "Problem", "NodeTypes", "Solution", "trim_timeline", "active_mask",
+    "feasible_types",
+    "verify", "penalty_map", "penalty_matrix", "relative_demand",
+    "min_penalty", "two_phase", "TypePool", "FIT_POLICIES",
+    "solve_lp", "lp_map", "LPResult",
+    "lp_lowerbound", "congestion_lowerbound", "no_timeline_lowerbound",
+    "rightsize", "evaluate", "ALGORITHMS",
+    "eliminate_nodes", "concentration_rounding", "solve_lp_pdhg",
+    "PDHGResult",
+]

@@ -1,0 +1,111 @@
+"""High-level TL-Rightsizing API.
+
+``rightsize(problem, algo)`` runs one named algorithm; ``evaluate(problem)``
+reproduces the paper's §VI protocol:
+
+  * PenaltyMap    — min cost over {h_avg, h_max} x {first, similarity}
+  * PenaltyMap-F  — same four combos with cross-node-type filling
+  * LP-map        — LP mapping, min over {first, similarity}
+  * LP-map-F      — LP mapping + filling, min over {first, similarity}
+
+All problems are timeline-trimmed internally; solutions are expressed (and
+verified) in trimmed coordinates, which preserves feasibility and cost
+exactly (paper §II).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .problem import Problem, trim_timeline
+from .penalty import penalty_map
+from .placement import two_phase, FIT_POLICIES
+from .solution import Solution, verify
+from .lp_map import solve_lp as _solve_lp
+
+__all__ = ["rightsize", "evaluate", "ALGORITHMS"]
+
+ALGORITHMS = ("penalty-map", "penalty-map-f", "lp-map", "lp-map-f")
+# beyond-paper: any algorithm + node-elimination local search ("+ls")
+EXTENDED_ALGORITHMS = ALGORITHMS + ("lp-map-f+ls", "penalty-map-f+ls")
+
+
+def _penalty_solutions(problem: Problem, filling: bool, backend: str):
+    for kind in ("avg", "max"):
+        mapping = penalty_map(problem, kind)
+        for fit in FIT_POLICIES:
+            yield two_phase(
+                problem, mapping, fit=fit, filling=filling, backend=backend,
+                meta={"algo": "penalty-map" + ("-f" if filling else ""),
+                      "h": kind},
+            )
+
+
+def _lp_solutions(problem: Problem, filling: bool, backend: str,
+                  lp_result=None):
+    res = lp_result if lp_result is not None else _solve_lp(problem)
+    for fit in FIT_POLICIES:
+        sol = two_phase(
+            problem, res.mapping, fit=fit, filling=filling, backend=backend,
+            meta={"algo": "lp-map" + ("-f" if filling else ""),
+                  "lp_objective": res.objective},
+        )
+        yield sol
+
+
+def rightsize(
+    problem: Problem,
+    algo: str = "lp-map-f",
+    backend: str = "numpy",
+    check: bool = True,
+    lp_result=None,
+) -> Solution:
+    """Solve one instance with one algorithm, taking the best fit policy
+    (and, for PenaltyMap, the best relative-demand kind) per the paper."""
+    trimmed, _ = trim_timeline(problem)
+    t0 = time.perf_counter()
+    local_search = algo.endswith("+ls")
+    if local_search:
+        algo = algo[: -len("+ls")]
+    if algo == "penalty-map":
+        sols = _penalty_solutions(trimmed, filling=False, backend=backend)
+    elif algo == "penalty-map-f":
+        sols = _penalty_solutions(trimmed, filling=True, backend=backend)
+    elif algo == "lp-map":
+        sols = _lp_solutions(trimmed, filling=False, backend=backend,
+                             lp_result=lp_result)
+    elif algo == "lp-map-f":
+        sols = _lp_solutions(trimmed, filling=True, backend=backend,
+                             lp_result=lp_result)
+    else:
+        raise ValueError(f"unknown algo {algo!r}; want one of {ALGORITHMS}")
+    best = min(sols, key=lambda s: s.cost(trimmed))
+    if local_search:
+        from .local_search import eliminate_nodes
+
+        best = eliminate_nodes(trimmed, best)
+    best.meta["wall_s"] = time.perf_counter() - t0
+    if check:
+        verify(trimmed, best)
+    return best
+
+
+def evaluate(problem: Problem, algos=ALGORITHMS, backend: str = "numpy") -> dict:
+    """Paper §VI protocol: per-algorithm best cost + the LP lower bound.
+
+    Returns {algo: cost, ..., 'lb': lp_lowerbound, 'normalized': {algo: cost/lb}}.
+    """
+    trimmed, _ = trim_timeline(problem)
+    # the LP is always solved: its objective is the normalizing lower bound
+    lp_result = _solve_lp(trimmed)
+    out: dict = {"lb": lp_result.objective, "costs": {}, "normalized": {},
+                 "wall_s": {}}
+    for algo in algos:
+        sol = rightsize(trimmed, algo, backend=backend, lp_result=lp_result)
+        cost = sol.cost(trimmed)
+        out["costs"][algo] = cost
+        out["normalized"][algo] = cost / max(out["lb"], 1e-12)
+        out["wall_s"][algo] = sol.meta["wall_s"]
+    return out

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: interval-congestion matmul.
+
+Computes ``out[t, k] = sum_u [start_u <= t <= end_u] * w[u, k]`` — the core
+operator behind the paper's congestion quantities (Lemma 1 lower bound, LP
+congestion constraints, and the PDHG LP solver's A / A^T applications).
+
+TPU adaptation (vs. the paper's per-slot Python loops): the task-active
+interval mask ``A[t, u]`` is never materialized in HBM; each (Tt, nb) tile
+is generated *inside VMEM* from the ``start``/``end`` vectors with
+``broadcasted_iota``, then contracted against the demand tile on the MXU.
+Block sizes keep the working set (Tt*nb mask + nb*Kb weights + Tt*Kb acc)
+within VMEM and 128-aligned for the MXU.
+
+Grid: (T/Tt, K/Kb, n/nb) with the task axis innermost so each output tile
+stays resident while the task dimension streams through.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["congestion_pallas"]
+
+# 128-aligned MXU tiles; fp32 working set = (128*512 + 512*128 + 128*128)*4
+# ~= 580 KiB << 16 MiB VMEM, leaving headroom for double buffering.
+BLOCK_T = 128
+BLOCK_N = 512
+BLOCK_K = 128
+
+
+def _congestion_kernel(start_ref, end_ref, w_ref, out_ref, *, block_t):
+    ti = pl.program_id(0)
+    nk = pl.num_programs(2)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # (Tt, nb) active mask generated in-register from the interval bounds
+    t0 = ti * block_t
+    t_ids = t0 + jax.lax.broadcasted_iota(jnp.int32, (block_t, 1), 0)
+    start = start_ref[...].reshape(1, -1)  # (1, nb)
+    end = end_ref[...].reshape(1, -1)
+    mask = (start <= t_ids) & (t_ids <= end)
+    acc = jnp.dot(
+        mask.astype(w_ref.dtype), w_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] += acc.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("T", "block_t", "block_n", "block_k", "interpret")
+)
+def congestion_pallas(
+    start: jax.Array,
+    end: jax.Array,
+    w: jax.Array,
+    T: int,
+    block_t: int = BLOCK_T,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """(T, K) congestion from (n,) int32 start/end and (n, K) weights.
+
+    Pads n, K, T up to block multiples; padded tasks carry start=1, end=0
+    (never active) and padded columns are zero, so padding is exact.
+    """
+    n, K = w.shape
+    dtype = w.dtype
+    n_p = max(pl.cdiv(n, block_n) * block_n, block_n)
+    K_p = max(pl.cdiv(K, block_k) * block_k, block_k)
+    T_p = max(pl.cdiv(T, block_t) * block_t, block_t)
+    start_p = jnp.full((n_p,), 1, jnp.int32).at[:n].set(start.astype(jnp.int32))
+    end_p = jnp.full((n_p,), 0, jnp.int32).at[:n].set(end.astype(jnp.int32))
+    w_p = jnp.zeros((n_p, K_p), dtype).at[:n, :K].set(w)
+
+    grid = (T_p // block_t, K_p // block_k, n_p // block_n)
+    out = pl.pallas_call(
+        functools.partial(_congestion_kernel, block_t=block_t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i, j, k: (k,)),
+            pl.BlockSpec((block_n,), lambda i, j, k: (k,)),
+            pl.BlockSpec((block_n, block_k), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_k), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((T_p, K_p), dtype),
+        interpret=interpret,
+    )(start_p, end_p, w_p)
+    return out[:T, :K]

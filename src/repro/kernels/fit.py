@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: placement fit-scoring.
+
+The placement phase's hot loop (paper §III "Time Complexity":
+O(n * |S| * D * T) dominates) asks, for one task against *all* open nodes of
+a node-type: is the node feasible over the task's span, and how similar is
+its remaining capacity to the demand (similarity-fit)?  This kernel fuses
+the three reductions in one pass over the (N, T, D) remaining-capacity
+tensor:
+
+    feas_margin[n] = min_{t in span, d} rem[n,t,d] - dem[d]
+    dot[n]         = sum_{t in span, d} (rem/cap)[n,t,d] * (dem/cap)[d]
+    rem_norm2[n]   = sum_{t in span, d} (rem/cap)[n,t,d]^2
+
+Layout: rem is passed transposed as (T, D, N) so nodes ride the 128-lane
+axis and timeslots the 8-sublane axis; D is a small static inner loop.
+Grid: (N/Nb, T/Tb) with the T axis innermost, accumulating into the (Nb,)
+outputs while they stay VMEM-resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fit_scores_pallas"]
+
+BLOCK_N = 128
+BLOCK_T = 256
+
+_BIG = 3.0e38  # < fp32 max; neutral for the min-reduction
+
+
+def _fit_kernel(rem_ref, dem_ref, mask_ref, invcap_ref, feas_ref, dot_ref,
+                norm_ref):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        feas_ref[...] = jnp.full_like(feas_ref, _BIG)
+        dot_ref[...] = jnp.zeros_like(dot_ref)
+        norm_ref[...] = jnp.zeros_like(norm_ref)
+
+    mask = mask_ref[...].reshape(-1, 1)  # (Tb, 1) in {0, 1}
+    D = rem_ref.shape[1]
+    feas = feas_ref[...]
+    dot = dot_ref[...]
+    norm = norm_ref[...]
+    for d in range(D):  # D is small and static: unrolled VPU loop
+        rem_d = rem_ref[:, d, :]  # (Tb, Nb)
+        dem_d = dem_ref[0, d]
+        inv_d = invcap_ref[0, d]
+        margin = jnp.where(mask > 0, rem_d - dem_d, _BIG)
+        feas = jnp.minimum(feas, margin.min(axis=0))
+        rem_n = rem_d * inv_d * mask
+        dot = dot + (dem_d * inv_d) * rem_n.sum(axis=0)
+        norm = norm + (rem_n * rem_n).sum(axis=0)
+    feas_ref[...] = feas
+    dot_ref[...] = dot
+    norm_ref[...] = norm
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_t", "interpret")
+)
+def fit_scores_pallas(
+    rem_tdn: jax.Array,   # (T, D, N) remaining capacity, node-minor
+    dem: jax.Array,       # (D,)
+    mask: jax.Array,      # (T,) float, 1 inside the span
+    inv_cap: jax.Array,   # (D,)
+    block_n: int = BLOCK_N,
+    block_t: int = BLOCK_T,
+    interpret: bool = False,
+):
+    """Returns (feas_margin, dot, rem_norm2), each (N,) float32.
+
+    Padding is exact: padded slots get mask=0 (neutral for all three
+    reductions), padded nodes are sliced away.
+    """
+    T, D, N = rem_tdn.shape
+    dtype = jnp.float32
+    N_p = max(pl.cdiv(N, block_n) * block_n, block_n)
+    T_p = max(pl.cdiv(T, block_t) * block_t, block_t)
+    rem_p = jnp.zeros((T_p, D, N_p), dtype).at[:T, :, :N].set(
+        rem_tdn.astype(dtype))
+    mask_p = jnp.zeros((T_p,), dtype).at[:T].set(mask.astype(dtype))
+    dem_2d = dem.astype(dtype).reshape(1, D)
+    inv_2d = inv_cap.astype(dtype).reshape(1, D)
+
+    grid = (N_p // block_n, T_p // block_t)
+    out_shape = [jax.ShapeDtypeStruct((N_p,), dtype)] * 3
+    out_spec = pl.BlockSpec((block_n,), lambda i, t: (i,))
+    feas, dot, norm = pl.pallas_call(
+        _fit_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, D, block_n), lambda i, t: (t, 0, i)),
+            pl.BlockSpec((1, D), lambda i, t: (0, 0)),
+            pl.BlockSpec((block_t,), lambda i, t: (t,)),
+            pl.BlockSpec((1, D), lambda i, t: (0, 0)),
+        ],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(rem_p, dem_2d, mask_p, inv_2d)
+    return feas[:N], dot[:N], norm[:N]

@@ -1,0 +1,76 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU hosts (this container) the kernels run under ``interpret=True``,
+which executes the kernel body in Python for correctness; on TPU the same
+code lowers to Mosaic.  ``ref.py`` holds the pure-jnp oracles used by the
+test sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import congestion as _congestion
+from . import fit as _fit
+from . import ref
+
+__all__ = ["on_tpu", "congestion", "fit_scores"]
+
+_EPS = 1e-7
+
+
+@functools.lru_cache(maxsize=1)
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def congestion(start, end, w, T: int, use_ref: bool = False):
+    """(T, K) interval congestion; Pallas kernel unless ``use_ref``."""
+    start = jnp.asarray(start, jnp.int32)
+    end = jnp.asarray(end, jnp.int32)
+    w = jnp.asarray(w, jnp.float32)
+    if use_ref:
+        return ref.congestion_ref(start, end, w, T)
+    return _congestion.congestion_pallas(
+        start, end, w, T, interpret=not on_tpu()
+    )
+
+
+def fit_scores(rem, dem, s: int, e: int, cap, scored: bool = False,
+               use_ref: bool = False):
+    """Host-facing fit API for the placement engine.
+
+    rem: (N, T, D) remaining capacities of the open nodes.
+    dem: (D,) demand; [s, e] the task's span; cap: (D,) type capacity.
+
+    Returns (feasible (N,) bool, score (N,) float) where score is the cosine
+    similarity of capacity-normalized demand vs. remaining capacity over the
+    span (only computed when ``scored``).
+    """
+    rem = np.asarray(rem)
+    N, T, D = rem.shape
+    dem_j = jnp.asarray(dem, jnp.float32)
+    inv_cap = 1.0 / jnp.asarray(cap, jnp.float32)
+    mask = jnp.zeros(T, jnp.float32).at[s : e + 1].set(1.0)
+    if use_ref:
+        feas_m, dot, norm2 = ref.fit_scores_ref(
+            jnp.asarray(rem, jnp.float32), dem_j, mask, inv_cap
+        )
+    else:
+        rem_tdn = jnp.asarray(np.ascontiguousarray(rem.transpose(1, 2, 0)),
+                              jnp.float32)
+        feas_m, dot, norm2 = _fit.fit_scores_pallas(
+            rem_tdn, dem_j, mask, inv_cap, interpret=not on_tpu()
+        )
+    feas = np.asarray(feas_m) >= -_EPS
+    if not scored:
+        return feas, np.zeros(N, np.float32)
+    span = e - s + 1
+    dem_n = np.asarray(dem) / np.asarray(cap)
+    dem_norm = float(np.linalg.norm(dem_n)) * np.sqrt(span)
+    cos = np.asarray(dot) / (dem_norm * np.sqrt(np.asarray(norm2)) + 1e-30)
+    return feas, cos

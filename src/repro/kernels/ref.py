@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth every kernel test compares against
+(``assert_allclose`` over shape/dtype sweeps).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["congestion_ref", "fit_scores_ref"]
+
+
+def congestion_ref(start, end, w, T: int):
+    """out[t, k] = sum_u [start_u <= t <= end_u] * w[u, k].
+
+    start, end: (n,) int32 inclusive slots; w: (n, K) float; out: (T, K).
+    The interval-congestion operator — used by the LP constraint evaluation,
+    the Lemma-1 lower bound and the PDHG solver's linear operator.
+    """
+    t = jnp.arange(T, dtype=jnp.int32)
+    mask = (start[None, :] <= t[:, None]) & (t[:, None] <= end[None, :])
+    return mask.astype(w.dtype) @ w
+
+
+def fit_scores_ref(rem, dem, mask, inv_cap):
+    """Placement fit scoring over all open nodes at once.
+
+    rem:     (N, T, D) remaining capacity per node.
+    dem:     (D,)      task demand.
+    mask:    (T,)      1.0 inside the task's span, 0.0 outside.
+    inv_cap: (D,)      1 / cap of this node-type.
+
+    Returns (feas_margin, dot, rem_norm2):
+      feas_margin: (N,) min over span,d of rem - dem  (feasible iff >= -eps)
+      dot:         (N,) sum over span,d of (rem/cap) * (dem/cap)
+      rem_norm2:   (N,) sum over span,d of (rem/cap)^2
+    """
+    dtype = rem.dtype
+    big = jnp.asarray(jnp.finfo(dtype).max, dtype)
+    margin = rem - dem[None, None, :]
+    masked_margin = jnp.where(mask[None, :, None] > 0, margin, big)
+    feas_margin = masked_margin.min(axis=(1, 2))
+    rem_n = rem * inv_cap[None, None, :]
+    dem_n = dem * inv_cap
+    dot = jnp.einsum("ntd,d,t->n", rem_n, dem_n, mask)
+    rem_norm2 = jnp.einsum("ntd,ntd,t->n", rem_n, rem_n, mask)
+    return feas_margin, dot, rem_norm2

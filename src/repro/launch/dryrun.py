@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production mesh, with NO real allocation
+(ShapeDtypeStruct stand-ins), and extract the roofline inputs:
+
+  * compiled.memory_analysis()  — bytes/device: proves the cell fits
+  * compiled.cost_analysis()    — HLO FLOPs + bytes for §Roofline
+  * collective bytes            — parsed from the compiled HLO text
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute result sizes)
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k \
+        --mesh pod --out results/dryrun
+    python -m repro.launch.dryrun --all   # every eligible cell, both meshes
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, cell_eligible, cells, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import ModelConfig, init_decode_state, init_params
+from repro.sharding import (
+    batch_specs,
+    decode_state_specs,
+    param_specs,
+)
+from repro.train import TrainConfig, init_train_state, make_train_step
+from repro.train.train_step import make_serve_steps
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; weak-type-correct, shardable,
+# never allocated)
+# --------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_shapes(cfg: ModelConfig, seq: int, batch: int, mode: str) -> dict:
+    if mode == "decode":
+        return {"tokens": _sds((batch,), jnp.int32)}
+    b = {
+        "tokens": _sds((batch, seq), jnp.int32),
+        "labels": _sds((batch, seq), jnp.int32),
+    }
+    if mode == "prefill":
+        del b["labels"]
+    if cfg.encoder_layers:
+        b["frames"] = _sds((batch, cfg.encoder_seq, cfg.d_model),
+                           jnp.float32)
+    if cfg.vision_seq:
+        b["vision"] = _sds((batch, cfg.vision_seq, cfg.d_model),
+                           jnp.float32)
+        b["mrope_positions"] = _sds((3, batch, seq), jnp.int32)
+    return b
+
+
+def input_specs(arch: str, shape_name: str, mode: str | None = None):
+    """(cfg, params_shapes, state_shapes, batch_shapes) for one cell —
+    all ShapeDtypeStructs via eval_shape; nothing is allocated."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mode = mode or shape.mode
+    params = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    batch = batch_shapes(cfg, shape.seq_len, shape.global_batch, mode)
+    if mode == "train":
+        tc = TrainConfig()
+        state = jax.eval_shape(lambda p: init_train_state(p, tc), params)
+    elif mode == "decode":
+        state = jax.eval_shape(
+            lambda p: init_decode_state(p, cfg, shape.global_batch,
+                                        shape.seq_len), params)
+    else:
+        state = None
+    return cfg, params, state, batch
+
+
+# --------------------------------------------------------------------------
+# HLO collective parsing
+# --------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_ARRAY_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|"
+                       r"u16|u8|pred)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "f16": 2, "bf16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+          "pred": 1}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _ARRAY_RE.finditer(type_str):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES.get(dt.split("{")[0], 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op, by kind.
+
+    Convention: a collective 'moves' its result size (all-gather output,
+    all-reduce full tensor); this is the standard bytes-on-wire proxy for
+    ring algorithms to within the (k-1)/k factor.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        eq = ls.split(" = ", 1)
+        if len(eq) != 2:
+            continue
+        rhs = eq[1]
+        opm = re.match(r"^(\([^)]*\)|\S+)\s+([a-z0-9-]+)", rhs)
+        if not opm:
+            continue
+        typ, op = opm.groups()
+        base = op.rstrip(".0123456789")
+        if base.endswith("-start"):
+            base = base[: -len("-start")]
+        if base in _COLLECTIVES:
+            out[base] += _shape_bytes(typ)
+            out["count"] += 1
+    return out
+
+
+# --------------------------------------------------------------------------
+# one cell
+# --------------------------------------------------------------------------
+
+
+def _sharded(mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             train_cfg: TrainConfig | None = None,
+             hints: bool = True) -> dict:
+    from repro.sharding.ctx import use_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = SHAPES[shape_name]
+    cfg, params_sh, state_sh, batch_sh = input_specs(arch, shape_name)
+    pspecs = _sharded(mesh, param_specs(params_sh, cfg, mesh))
+    bspecs = _sharded(mesh, batch_specs(batch_sh, cfg, mesh))
+    n_dev = mesh.size
+    t0 = time.perf_counter()
+
+    with mesh, use_mesh(mesh if hints else None):
+        if shape.mode == "train":
+            tc = train_cfg or TrainConfig()
+            step = make_train_step(cfg, tc)
+            # optimizer state shares the param specs; scalars replicate
+            sspecs = {
+                "opt": {
+                    "m": pspecs, "v": pspecs,
+                    "step": NamedSharding(mesh, P()),
+                },
+            }
+            if tc.compress_grads:
+                sspecs["err"] = pspecs
+            lowered = jax.jit(
+                step,
+                in_shardings=(pspecs, sspecs, bspecs),
+                out_shardings=(pspecs, sspecs, None),
+                donate_argnums=(0, 1),
+            ).lower(params_sh, jax.eval_shape(
+                lambda p: init_train_state(p, tc), params_sh), batch_sh)
+        elif shape.mode == "decode":
+            _pre, decode_fn = make_serve_steps(cfg, shape.seq_len)
+            cspecs = _sharded(mesh, decode_state_specs(state_sh, cfg, mesh))
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(pspecs, cspecs, bspecs["tokens"]),
+                out_shardings=(None, cspecs),
+                donate_argnums=(1,),
+            ).lower(params_sh, state_sh, batch_sh["tokens"])
+        else:  # prefill
+            prefill_fn, _dec = make_serve_steps(cfg, shape.seq_len)
+            state_out = jax.eval_shape(
+                lambda p, b: prefill_fn(p, b), params_sh, batch_sh)[1]
+            cspecs = _sharded(mesh,
+                              decode_state_specs(state_out, cfg, mesh))
+            lowered = jax.jit(
+                prefill_fn,
+                in_shardings=(pspecs, bspecs),
+                out_shardings=(None, cspecs),
+            ).lower(params_sh, batch_sh)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    # trip-count-aware accounting (xla's cost_analysis counts while bodies
+    # once; hlo_cost multiplies by known_trip_count — see hlo_cost.py)
+    from repro.launch import hlo_cost as hc
+    acc = hc.analyze(hlo)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "mode": shape.mode,
+        "sharding_hints": hints,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        # per-device totals, trip-count-aware
+        "flops": acc.flops,
+        "traffic_bytes": acc.traffic_bytes,
+        "collective_bytes": acc.collective_bytes,
+        "collective_count": acc.collective_count,
+        # raw xla numbers for reference (bodies counted once)
+        "xla_flops": float(cost.get("flops", -1)) if cost else -1,
+        "xla_bytes_accessed": float(cost.get("bytes accessed", -1))
+        if cost else -1,
+        "xla_collective_bytes_once": coll,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                result[k] = int(v)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-hints", action="store_true",
+                    help="disable sharding hints (paper-faithful baseline)")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    todo = []
+    if args.all:
+        for arch, shape_name, ok, _why in cells(include_skipped=False):
+            todo.append((arch, shape_name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        ok, why = cell_eligible(get_config(args.arch), SHAPES[args.shape])
+        if not ok:
+            print(f"SKIP {args.arch} x {args.shape}: {why}")
+            return 0
+        todo.append((args.arch, args.shape))
+
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch, shape_name in todo:
+        for multi_pod in meshes:
+            tag = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
+            try:
+                res = run_cell(arch, shape_name, multi_pod,
+                               hints=not args.no_hints)
+                path = os.path.join(args.out, tag + ".json")
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                print(f"OK   {tag}: compile={res['compile_s']}s "
+                      f"flops/dev={res['flops']:.3e} "
+                      f"coll/dev={sum(res['collective_bytes'].values()):.3e}B",
+                      flush=True)
+            except Exception as e:
+                failures += 1
+                print(f"FAIL {tag}: {e}", flush=True)
+                traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""Production mesh definition.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS *before* any jax
+initialization; smoke tests see the real single CPU device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod (v5e-256-like); 2 pods = 512 chips when
+    ``multi_pod``.  Axes: data (FSDP/batch), model (TP/EP), pod (pure DP,
+    gradient sync over DCN)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """A 1x1 mesh over the real local device — used by smoke tests and the
+    CPU end-to-end examples."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))

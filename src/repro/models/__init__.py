@@ -1,0 +1,19 @@
+"""LM model substrate: configs, blocks, assembly."""
+
+from .config import GLOBAL_WINDOW, ModelConfig, Segment, SubBlock, \
+    build_segments
+from .model import (
+    decode_step,
+    forward_train,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    prefill,
+    sub_cache_len,
+)
+
+__all__ = [
+    "GLOBAL_WINDOW", "ModelConfig", "Segment", "SubBlock", "build_segments",
+    "decode_step", "forward_train", "init_decode_state", "init_params",
+    "loss_fn", "prefill", "sub_cache_len",
+]

@@ -1,0 +1,150 @@
+"""GQA attention: streaming (flash-style) train/prefill path and KV-cache
+decode path, with sliding-window and soft-cap support.
+
+TPU adaptation: instead of materializing (S, S) score matrices, the
+train/prefill path streams KV in chunks under ``lax.scan`` with an online
+softmax (running max / normalizer), and maps over query chunks — the
+standard flash decomposition expressed in pure JAX so XLA fuses it; memory
+is O(S * chunk) instead of O(S^2).  Block-level causal/window masks are
+generated from indices, never stored.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .layers import softcap
+
+__all__ = [
+    "streaming_attention",
+    "decode_attention",
+    "init_cache_positions",
+]
+
+NEG_INF = -2.0e38
+
+
+def _block_mask(q_pos, k_pos, window: int, causal: bool):
+    """(Q, K) boolean mask from absolute positions; window < 0 = full."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= q_pos[:, None] - k_pos[None, :] < window
+    return ok
+
+
+def streaming_attention(
+    q, k, v, *,
+    window: int = -1,
+    causal: bool = True,
+    attn_softcap: float | None = None,
+    q_offset: int = 0,
+    kv_offset: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+):
+    """Online-softmax attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) with H = KV * G.
+    Returns (B, Sq, H, hd).  Positions are offsets + arange (contiguous).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    # pad to chunk multiples
+    nq = -(-Sq // qc)
+    nk = -(-Skv // kc)
+    q_pad = nq * qc - Sq
+    k_pad = nk * kc - Skv
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+
+    qr = q.reshape(B, nq, qc, KV, G, hd)
+    kr = k.reshape(B, nk, kc, KV, hd)
+    vr = v.reshape(B, nk, kc, KV, hd)
+
+    q_positions = q_offset + jnp.arange(nq * qc, dtype=jnp.int32)
+    k_positions = kv_offset + jnp.arange(nk * kc, dtype=jnp.int32)
+    k_valid = jnp.arange(nk * kc) < Skv  # mask KV padding
+
+    def q_block(args):
+        qb, qpos = args  # (B, qc, KV, G, hd), (qc,)
+
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            kb, vb, kpos, kval = inp  # (B, kc, KV, hd), ..., (kc,), (kc,)
+            s = jnp.einsum("bqkgd,bckd->bqgkc", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, attn_softcap)
+            mask = _block_mask(qpos, kpos, window, causal) & kval[None, :]
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bqgkc,bckd->bqkgd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None].transpose(0, 1, 3, 2, 4) + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, qc, KV, G, hd), jnp.float32)
+        m0 = jnp.full((B, qc, G, KV), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qc, G, KV), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (kr.transpose(1, 0, 2, 3, 4), vr.transpose(1, 0, 2, 3, 4),
+             k_positions.reshape(nk, kc), k_valid.reshape(nk, kc)),
+        )
+        norm = jnp.maximum(l, 1e-37)[..., None].transpose(0, 1, 3, 2, 4)
+        return (acc / norm).astype(q.dtype)
+
+    out = jax.lax.map(
+        q_block,
+        (qr.transpose(1, 0, 2, 3, 4, 5), q_positions.reshape(nq, qc)),
+    )  # (nq, B, qc, KV, G, hd)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qc, H, hd)
+    return out[:, :Sq]
+
+
+def init_cache_positions(cache_len: int) -> jax.Array:
+    """Per-slot absolute positions; -1 marks an empty slot."""
+    return jnp.full((cache_len,), -1, jnp.int32)
+
+
+def decode_attention(
+    q, k_cache, v_cache, slot_pos, pos, *,
+    window: int = -1,
+    attn_softcap: float | None = None,
+):
+    """One-token attention against a (ring-buffer) KV cache.
+
+    q: (B, H, hd); k_cache, v_cache: (B, CL, KV, hd);
+    slot_pos: (CL,) absolute position stored in each slot (-1 = empty);
+    pos: scalar int32 — the current token's position (already written).
+    """
+    B, H, hd = q.shape
+    _, CL, KV, _ = k_cache.shape
+    G = H // KV
+    scale = hd ** -0.5
+    qr = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bckd->bgkc", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, attn_softcap)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window > 0:
+        valid &= pos - slot_pos < window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgkc,bckd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, hd).astype(q.dtype)

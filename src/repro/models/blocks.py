@@ -1,0 +1,298 @@
+"""Transformer-family blocks: init + train-mode + decode-mode application.
+
+Every block is a pure function over a *single layer's* params; the model
+assembly (model.py) stacks layers and drives these under ``lax.scan``.
+
+Block layout conventions (pre-norm residual throughout):
+  attn   : x += Attn(norm(x));  x += MLP_or_MoE(norm(x))
+  xattn  : x += SelfAttn(norm(x)); x += CrossAttn(norm(x)); x += MLP(norm(x))
+  rglru  : x += RGLRU_mixer(norm(x)); x += MLP(norm(x))
+  rwkv   : x += TimeMix(norm(x));  x += ChannelMix(norm(x))
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import constrain
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import rwkv as rwkv_mod
+from .config import ModelConfig
+from .layers import gated_mlp, init_dense, init_norm, mrope, rms_norm, rope
+
+__all__ = ["init_block", "block_train", "block_decode", "init_block_cache"]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_attn_params(key, cfg: ModelConfig, dtype, cross: bool = False):
+    """3-D attention weights (d, heads, head_dim): head/head_dim axes stay
+    explicit so the partitioner can shard whichever divides the mesh."""
+    ks = jax.random.split(key, 5)
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    p = {
+        "wq": init_dense(ks[0], (d, H * hd), dtype).reshape(d, H, hd),
+        "wk": init_dense(ks[1], (d, KV * hd), dtype).reshape(d, KV, hd),
+        "wv": init_dense(ks[2], (d, KV * hd), dtype).reshape(d, KV, hd),
+        "wo": init_dense(ks[3], (H * hd, d), dtype).reshape(H, hd, d),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((KV, hd), dtype)
+        p["bv"] = jnp.zeros((KV, hd), dtype)
+    return p
+
+
+def _init_mlp(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 3)
+    d, ff = cfg.d_model, cfg.d_ff
+    p = {
+        "w_up": init_dense(ks[1], (d, ff), dtype),
+        "w_down": init_dense(ks[2], (ff, d), dtype, scale=ff ** -0.5),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = init_dense(ks[0], (d, ff), dtype)
+    return p
+
+
+def init_block(key, cfg: ModelConfig, kind: str, moe: bool, dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {"ln1": init_norm((d,), dtype), "ln2": init_norm((d,), dtype)}
+    if kind in ("attn", "xattn"):
+        p["attn"] = _init_attn_params(ks[0], cfg, dtype)
+        if kind == "xattn":
+            p["xattn"] = _init_attn_params(ks[1], cfg, dtype, cross=True)
+            p["ln_x"] = init_norm((d,), dtype)
+        if moe:
+            p["moe"] = moe_mod.init_moe(
+                ks[2], d, cfg.moe_d_ff, cfg.num_experts, dtype)
+        else:
+            p["mlp"] = _init_mlp(ks[2], cfg, dtype)
+    elif kind == "rglru":
+        p["rec"] = rglru_mod.init_rglru(
+            ks[0], d, cfg.rnn_width or d, cfg.conv_width, dtype)
+        p["mlp"] = _init_mlp(ks[2], cfg, dtype)
+    elif kind == "rwkv":
+        p["tm"] = rwkv_mod.init_rwkv_timemix(ks[0], d, cfg.rwkv_head_dim,
+                                             dtype)
+        p["cm"] = rwkv_mod.init_rwkv_channelmix(ks[1], d, cfg.d_ff, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+# --------------------------------------------------------------------------
+# train / prefill
+# --------------------------------------------------------------------------
+
+def _attention_tr(x, p, cfg: ModelConfig, window, theta, positions,
+                  causal=True, mrope_positions=None):
+    B, S, d = x.shape
+    hd = cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.mrope_sections is not None and mrope_positions is not None:
+        q = mrope(q, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+        k = mrope(k, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    kv_cache = (k, v)
+    # GQA -> MHA for the attention compute: repeating KV heads to the full
+    # head count keeps one uniform head axis sharded over 'model'
+    # end-to-end, eliminating GSPMD's involuntary reshard of the (KV, G)
+    # grouped reshape (see EXPERIMENTS.md §Perf iteration 1).
+    G = cfg.num_heads // cfg.num_kv_heads
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    v = constrain(v, "batch", None, "heads", None)
+    out = attn_mod.streaming_attention(
+        q, k, v, window=window, causal=causal,
+        attn_softcap=cfg.attn_softcap,
+    )
+    out = constrain(out, "batch", None, "heads", None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), kv_cache
+
+
+def _cross_attention_tr(x, p, cfg: ModelConfig, enc_out):
+    """Cross-attention against the encoder output (B, Se, d); K/V are
+    computed with this layer's projections."""
+    B, S, d = x.shape
+    k_enc = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v_enc = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    G = cfg.num_heads // cfg.num_kv_heads
+    if G > 1:
+        k_enc = jnp.repeat(k_enc, G, axis=2)
+        v_enc = jnp.repeat(v_enc, G, axis=2)
+    q = constrain(q, "batch", None, "heads", None)
+    k_enc = constrain(k_enc, "batch", None, "heads", None)
+    v_enc = constrain(v_enc, "batch", None, "heads", None)
+    out = attn_mod.streaming_attention(
+        q, k_enc, v_enc, window=-1, causal=False,
+        attn_softcap=cfg.attn_softcap,
+    )
+    out = constrain(out, "batch", None, "heads", None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def block_train(x, p, cfg: ModelConfig, kind: str, moe: bool, *,
+                window=-1, theta=10_000.0, positions=None,
+                causal=True, enc_out=None, mrope_positions=None):
+    """One layer, full-sequence.
+
+    Returns (x, aux_loss, state) where state is the layer's end-of-sequence
+    decode state: (k, v) full-sequence tensors for attention kinds, the
+    recurrent state dict for rglru/rwkv.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "xattn"):
+        h, kv = _attention_tr(rms_norm(x, p["ln1"]), p["attn"], cfg,
+                              window, theta, positions, causal,
+                              mrope_positions)
+        x = x + h
+        if kind == "xattn":
+            x = x + _cross_attention_tr(rms_norm(x, p["ln_x"]), p["xattn"],
+                                        cfg, enc_out)
+        h_in = rms_norm(x, p["ln2"])
+        if moe:
+            h, aux = moe_mod.moe_mlp(
+                h_in, p["moe"], top_k=cfg.num_experts_per_tok,
+                capacity_factor=cfg.capacity_factor)
+        else:
+            h = gated_mlp(h_in, p["mlp"])
+        return x + h, aux, kv
+    if kind == "rglru":
+        rec = p["rec"]
+        K = cfg.conv_width
+        xin = rms_norm(x, p["ln1"])
+        gate = jax.nn.gelu(xin @ rec["w_gate"])
+        u_raw = xin @ rec["w_x"]
+        u = rglru_mod.temporal_conv(u_raw, rec["conv_w"])
+        u, h_fin = rglru_mod.rglru_scan(u, rec)
+        x = x + (gate * u) @ rec["w_out"]
+        x = x + gated_mlp(rms_norm(x, p["ln2"]), p["mlp"])
+        conv_tail = jnp.pad(u_raw, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):]
+        return x, aux, {"h": h_fin, "conv": conv_tail}
+    if kind == "rwkv":
+        B, S, d = x.shape
+        h, S_fin, x_tm = rwkv_mod.timemix_scan(
+            rms_norm(x, p["ln1"]), jnp.zeros((B, d), x.dtype), p["tm"],
+            cfg.rwkv_head_dim)
+        x = x + h
+        h, x_cm = rwkv_mod.channelmix(rms_norm(x, p["ln2"]),
+                                      jnp.zeros((B, d), x.dtype), p["cm"])
+        return x + h, aux, {"S": S_fin, "x_tm": x_tm, "x_cm": x_cm}
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# decode (single token, stateful)
+# --------------------------------------------------------------------------
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int,
+                     cache_len: int, dtype):
+    """Per-layer decode state (unstacked; model.py stacks across layers)."""
+    hd, kv = cfg.head_dim, cfg.num_kv_heads
+    if kind in ("attn", "xattn"):
+        return {
+            "k": jnp.zeros((batch, cache_len, kv, hd), dtype),
+            "v": jnp.zeros((batch, cache_len, kv, hd), dtype),
+            "slot_pos": attn_mod.init_cache_positions(cache_len),
+        }
+    if kind == "rglru":
+        w = cfg.rnn_width or cfg.d_model
+        return {
+            "h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        }
+    if kind == "rwkv":
+        d = cfg.d_model
+        H = d // cfg.rwkv_head_dim
+        return {
+            "S": jnp.zeros((batch, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                           jnp.float32),
+            "x_tm": jnp.zeros((batch, d), dtype),
+            "x_cm": jnp.zeros((batch, d), dtype),
+        }
+    raise ValueError(kind)
+
+
+def block_decode(x, cache, p, cfg: ModelConfig, kind: str, moe: bool, *,
+                 pos, window=-1, theta=10_000.0, enc_kv=None):
+    """One layer, one token.  x: (B, d).  Returns (x, new_cache)."""
+    hd = cfg.head_dim
+    B, d = x.shape
+    if kind in ("attn", "xattn"):
+        xin = rms_norm(x, p["ln1"])
+        q = jnp.einsum("bd,dhk->bhk", xin, p["attn"]["wq"])
+        k = jnp.einsum("bd,dhk->bhk", xin, p["attn"]["wk"])
+        v = jnp.einsum("bd,dhk->bhk", xin, p["attn"]["wv"])
+        if cfg.qkv_bias:
+            q, k, v = (q + p["attn"]["bq"], k + p["attn"]["bk"],
+                       v + p["attn"]["bv"])
+        posv = jnp.full((B, 1), pos, jnp.int32)
+        q = rope(q[:, None], posv, theta)[:, 0]
+        k = rope(k[:, None], posv, theta)[:, 0]
+        CL = cache["k"].shape[1]
+        slot = jnp.mod(pos, CL)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k[:, None].astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v[:, None].astype(cache["v"].dtype), slot, axis=1)
+        slot_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["slot_pos"], jnp.full((1,), pos, jnp.int32), slot, axis=0)
+        out = attn_mod.decode_attention(
+            q, k_cache, v_cache, slot_pos, pos, window=window,
+            attn_softcap=cfg.attn_softcap)
+        x = x + jnp.einsum("bhk,hkd->bd", out, p["attn"]["wo"])
+        new_cache = {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}
+        if kind == "xattn":
+            xin = rms_norm(x, p["ln_x"])
+            qx = jnp.einsum("bd,dhk->bhk", xin, p["xattn"]["wq"])[:, None]
+            k_enc, v_enc = enc_kv
+            out = attn_mod.streaming_attention(
+                qx, k_enc, v_enc, window=-1, causal=False,
+                attn_softcap=cfg.attn_softcap)
+            x = x + jnp.einsum("bhk,hkd->bd", out[:, 0], p["xattn"]["wo"])
+        h_in = rms_norm(x, p["ln2"])
+        if moe:
+            h, _aux = moe_mod.moe_mlp(
+                h_in, p["moe"], top_k=cfg.num_experts_per_tok,
+                capacity_factor=cfg.capacity_factor)
+        else:
+            h = gated_mlp(h_in, p["mlp"])
+        return x + h, new_cache
+    if kind == "rglru":
+        rec = p["rec"]
+        xin = rms_norm(x, p["ln1"])
+        gate = jax.nn.gelu(xin @ rec["w_gate"])
+        u = xin @ rec["w_x"]
+        u, conv_state = rglru_mod.conv_step(u, cache["conv"], rec["conv_w"])
+        u, h_state = rglru_mod.rglru_step(u, cache["h"], rec)
+        x = x + (gate * u) @ rec["w_out"]
+        x = x + gated_mlp(rms_norm(x, p["ln2"]), p["mlp"])
+        return x, {"h": h_state, "conv": conv_state}
+    if kind == "rwkv":
+        h, (S_new, x_tm) = rwkv_mod.timemix_step(
+            rms_norm(x, p["ln1"]), (cache["S"], cache["x_tm"]), p["tm"],
+            cfg.rwkv_head_dim)
+        x = x + h
+        h, x_cm = rwkv_mod.channelmix_step(rms_norm(x, p["ln2"]),
+                                           cache["x_cm"], p["cm"])
+        return x + h, {"S": S_new, "x_tm": x_tm, "x_cm": x_cm}
+    raise ValueError(kind)

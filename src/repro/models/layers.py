@@ -1,0 +1,100 @@
+"""Shared layer primitives: RMSNorm, RoPE / M-RoPE, gated MLP, softcap."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm", "rope", "mrope", "gated_mlp", "softcap", "init_dense",
+    "init_norm", "dense",
+]
+
+
+def softcap(x, cap):
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    """RMSNorm in fp32, cast back to input dtype (gemma convention:
+    weight is a residual offset from 1)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dtype)
+
+
+def _rope_angles(positions, dim: int, theta: float):
+    """(..., dim/2) angles for the given positions."""
+    freqs = theta ** (-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    return positions[..., None].astype(jnp.float32) * freqs  # (..., dim/2)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary position embedding.
+
+    x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+    """
+    half = x.shape[-1] // 2
+    ang = _rope_angles(positions, x.shape[-1], theta)  # (..., seq, half)
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope(x, positions_thw, sections, theta: float = 10_000.0):
+    """Multimodal RoPE (Qwen2-VL): the head_dim/2 frequency slots are split
+    into (t, h, w) sections, each rotated by its own position stream.
+
+    x: (batch, seq, heads, head_dim); positions_thw: (3, batch, seq).
+    sections: per-axis *pair* counts summing to head_dim // 2.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, 2 * half, 2, dtype=jnp.float32) / (2 * half))
+    # build per-slot positions by section
+    parts = []
+    off = 0
+    for i, sec in enumerate(sections):
+        pos = positions_thw[i].astype(jnp.float32)  # (batch, seq)
+        parts.append(pos[..., None] * freqs[off: off + sec])
+        off += sec
+    ang = jnp.concatenate(parts, axis=-1)  # (batch, seq, half)
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_dense(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def init_norm(shape, dtype):
+    return jnp.zeros(shape, dtype)  # residual-from-1 convention
+
+
+def dense(x, w, b=None):
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def gated_mlp(x, params):
+    """SwiGLU MLP (gelu(x W_gate) * x W_up) W_down, or plain GELU MLP
+    gelu(x W_up) W_down when no gate matrix is present."""
+    up = x @ params["w_up"]
+    if "w_gate" in params:
+        return (jax.nn.gelu(x @ params["w_gate"]) * up) @ params["w_down"]
+    return jax.nn.gelu(up) @ params["w_down"]

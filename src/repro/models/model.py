@@ -1,0 +1,361 @@
+"""Model assembly: repeated-unit scan segments, train forward (chunked xent
+loss), prefill, and single-token decode.
+
+Layers are grouped into repeated-unit segments (config.build_segments);
+each segment scans its unit of sub-blocks with parameters stacked along a
+leading ``repeats`` axis — keeping HLO size O(#distinct sub-blocks), not
+O(#layers), which is what makes 88-layer and 61-layer configs
+lower/compile quickly for the multi-pod dry-run, while still supporting
+alternating local/global and hybrid recurrent/attention patterns.
+
+The loss never materializes (B, S, V) logits: cross-entropy is computed per
+sequence chunk under a rematerialized scan (peak memory O(B * chunk * V)).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks as blocks_mod
+from .config import GLOBAL_WINDOW, ModelConfig, SubBlock, build_segments
+from .layers import init_dense, init_norm, rms_norm, softcap
+
+__all__ = [
+    "init_params",
+    "forward_train",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "init_decode_state",
+    "sub_cache_len",
+]
+
+
+def sub_cache_len(sub: SubBlock, max_len: int) -> int:
+    """KV-cache length of one sub-block: full context for global attention,
+    the window for sliding-window layers, 1 slot (unused) for stateful
+    recurrent kinds."""
+    if sub.kind in ("attn", "xattn"):
+        return max_len if sub.window == GLOBAL_WINDOW \
+            else min(sub.window, max_len)
+    return 1
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _stack_init(key, n: int, init_one):
+    """Initialize n copies of a block and stack each leaf: (n, ...)."""
+    keys = jax.random.split(key, n)
+    inits = [init_one(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *inits)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = _dtype(cfg)
+    segs = build_segments(cfg)
+    k_embed, k_seg, k_enc = jax.random.split(key, 3)
+    params: dict[str, Any] = {
+        # N(0, 1/sqrt(d)): input embeddings are re-scaled by sqrt(d) at
+        # lookup; the tied unembedding then produces O(1) logits at init.
+        "embed": init_dense(k_embed, (cfg.vocab_size, cfg.d_model), dtype,
+                            scale=cfg.d_model ** -0.5),
+        "final_norm": init_norm((cfg.d_model,), dtype),
+    }
+    seg_keys = jax.random.split(k_seg, max(len(segs), 1))
+    segments = []
+    for i, seg in enumerate(segs):
+        sub_keys = jax.random.split(seg_keys[i], len(seg.unit))
+        segments.append(tuple(
+            _stack_init(
+                sub_keys[j], seg.repeats,
+                lambda k, sub=sub: blocks_mod.init_block(
+                    k, cfg, sub.kind, sub.moe, dtype),
+            )
+            for j, sub in enumerate(seg.unit)
+        ))
+    params["segments"] = tuple(segments)
+    if cfg.encoder_layers:
+        enc_keys = jax.random.split(k_enc, 2)
+        params["encoder"] = {
+            "blocks": _stack_init(
+                enc_keys[0], cfg.encoder_layers,
+                lambda k: blocks_mod.init_block(k, cfg, "attn", False,
+                                                dtype),
+            ),
+            "final_norm": init_norm((cfg.d_model,), dtype),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# train forward + loss
+# --------------------------------------------------------------------------
+
+def _embed_tokens(params, cfg: ModelConfig, tokens):
+    x = params["embed"][tokens]  # (B, S, d) gather
+    return x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+
+def _run_encoder(frames, params, cfg: ModelConfig):
+    """Bidirectional encoder over precomputed frame embeddings (stub
+    frontend): (B, Se, d) -> (B, Se, d)."""
+    enc = params["encoder"]
+    Se = frames.shape[1]
+    positions = jnp.arange(Se, dtype=jnp.int32)[None, :]
+
+    def body(xc, p):
+        xc, _a, _st = blocks_mod.block_train(
+            xc, p, cfg, "attn", False, window=GLOBAL_WINDOW,
+            theta=cfg.rope_theta, positions=positions, causal=False)
+        return xc, None
+
+    x, _ = jax.lax.scan(body, frames, enc["blocks"])
+    return rms_norm(x, enc["final_norm"])
+
+
+def forward_train(params, cfg: ModelConfig, batch, remat: bool = False):
+    """Returns (final hidden states (B, S, d), aux losses)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_tokens(params, cfg, tokens)
+    if cfg.vision_seq and "vision" in batch:
+        # stub multimodal frontend: precomputed patch embeddings replace
+        # the first vision_seq positions
+        v = batch["vision"].astype(x.dtype)
+        x = jnp.concatenate([v, x[:, v.shape[1]:]], axis=1)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _run_encoder(batch["frames"].astype(x.dtype), params, cfg)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :],
+                                 (B, S))
+    mrope_positions = batch.get("mrope_positions")
+    aux_total = jnp.zeros((), jnp.float32)
+    for seg, seg_params in zip(build_segments(cfg), params["segments"]):
+
+        def body(carry, inp, seg=seg):
+            xc, aux = carry
+            for j, sub in enumerate(seg.unit):
+                xc, a, _st = blocks_mod.block_train(
+                    xc, inp[j], cfg, sub.kind, sub.moe, window=sub.window,
+                    theta=sub.theta, positions=positions, causal=True,
+                    enc_out=enc_out, mrope_positions=mrope_positions)
+                aux = aux + a
+            return (xc, aux), None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), seg_params)
+    return rms_norm(x, params["final_norm"]), aux_total
+
+
+def _xent_chunk(x, embed, labels, cfg: ModelConfig):
+    """x: (B, C, d); labels: (B, C). Returns (sum_loss, count)."""
+    logits = (x @ embed.T).astype(jnp.float32)
+    logits = softcap(logits, cfg.logit_softcap)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None].astype(jnp.int32),
+        axis=-1)[..., 0]
+    valid = labels >= 0
+    loss = jnp.where(valid, lse - ll, 0.0)
+    return loss.sum(), valid.sum()
+
+
+def loss_fn(params, cfg: ModelConfig, batch, remat: bool = False,
+            loss_chunk: int = 512, aux_weight: float = 0.01):
+    """Scalar LM loss with chunked cross-entropy (never materializes the
+    full (B, S, V) logits)."""
+    x, aux = forward_train(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    B, S, d = x.shape
+    C = min(loss_chunk, S)
+    n_chunks = -(-S // C)
+    pad = n_chunks * C - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xc = x.reshape(B, n_chunks, C, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, C).transpose(1, 0, 2)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_body(carry, inp):
+        tot, cnt = carry
+        xb, lb = inp
+        s, c = _xent_chunk(xb, params["embed"], lb, cfg)
+        return (tot + s, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        chunk_body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (xc, lc))
+    loss = tot / jnp.maximum(cnt, 1)
+    return loss + aux_weight * aux, {"xent": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def init_decode_state(params, cfg: ModelConfig, batch: int, max_len: int,
+                      enc_out=None) -> dict:
+    """Decode state: per-segment, per-sub-block stacked caches (+ cross
+    K/V for enc-dec models)."""
+    dtype = _dtype(cfg)
+    segs = build_segments(cfg)
+    caches = []
+    for si, seg in enumerate(segs):
+        sub_caches = []
+        for j, sub in enumerate(seg.unit):
+            cl = sub_cache_len(sub, max_len)
+            one = lambda sub=sub, cl=cl: blocks_mod.init_block_cache(
+                cfg, sub.kind, batch, cl, dtype)
+            stacked = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[one() for _ in range(seg.repeats)])
+            if sub.kind == "xattn":
+                hd, kv = cfg.head_dim, cfg.num_kv_heads
+                Se = cfg.encoder_seq
+                if enc_out is not None:
+                    xk, xv = _cross_kv(params["segments"][si][j], cfg,
+                                       enc_out)
+                else:
+                    xk = jnp.zeros((seg.repeats, batch, Se, kv, hd), dtype)
+                    xv = jnp.zeros((seg.repeats, batch, Se, kv, hd), dtype)
+                stacked = dict(stacked, xk=xk, xv=xv)
+            sub_caches.append(stacked)
+        caches.append(tuple(sub_caches))
+    return {"caches": tuple(caches), "pos": jnp.zeros((), jnp.int32)}
+
+
+def _cross_kv(stacked_params, cfg: ModelConfig, enc_out):
+    """Per-layer cross-attention K/V from the encoder output.
+    stacked_params: one sub-block's params with leading repeats axis."""
+    B, Se, d = enc_out.shape
+
+    def one_layer(p):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wv"])
+        return k, v
+
+    return jax.vmap(one_layer)(stacked_params)
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens):
+    """One token for the whole batch.  tokens: (B,) int32.
+    Returns (logits (B, V), new state)."""
+    pos = state["pos"]
+    x = _embed_tokens(params, cfg, tokens[:, None])[:, 0]  # (B, d)
+    new_caches = []
+    for seg, seg_params, cache in zip(build_segments(cfg),
+                                      params["segments"], state["caches"]):
+
+        def body(xc, inp, seg=seg):
+            p_all, c_all = inp
+            new_c = []
+            for j, sub in enumerate(seg.unit):
+                c_j = c_all[j]
+                ekv = ((c_j["xk"], c_j["xv"]) if sub.kind == "xattn"
+                       else None)
+                core = {k: v for k, v in c_j.items()
+                        if k not in ("xk", "xv")}
+                xc, cn = blocks_mod.block_decode(
+                    xc, core, p_all[j], cfg, sub.kind, sub.moe, pos=pos,
+                    window=sub.window, theta=sub.theta, enc_kv=ekv)
+                if sub.kind == "xattn":
+                    cn = dict(cn, xk=c_j["xk"], xv=c_j["xv"])
+                new_c.append(cn)
+            return xc, tuple(new_c)
+
+        x, cache_new = jax.lax.scan(body, x, (seg_params, cache))
+        new_caches.append(cache_new)
+    x = rms_norm(x, params["final_norm"])
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    logits = softcap(logits, cfg.logit_softcap)
+    return logits, {"caches": tuple(new_caches), "pos": pos + 1}
+
+
+# --------------------------------------------------------------------------
+# prefill
+# --------------------------------------------------------------------------
+
+def _format_attn_cache(kv, sub: SubBlock, cfg: ModelConfig, S: int,
+                       max_len: int, dtype):
+    """Pack full-sequence K/V into ring-buffer cache layout: entry for
+    position p lives at slot p % cache_len."""
+    k_full, v_full = kv
+    B = k_full.shape[0]
+    cl = sub_cache_len(sub, max_len)
+    take = min(S, cl)
+    pos_tail = jnp.arange(S - take, S, dtype=jnp.int32)
+    slots = jnp.mod(pos_tail, cl)
+    kc = jnp.zeros((B, cl, cfg.num_kv_heads, cfg.head_dim), dtype)
+    vc = jnp.zeros((B, cl, cfg.num_kv_heads, cfg.head_dim), dtype)
+    kc = kc.at[:, slots].set(k_full[:, S - take:].astype(dtype))
+    vc = vc.at[:, slots].set(v_full[:, S - take:].astype(dtype))
+    sp = jnp.full((cl,), -1, jnp.int32).at[slots].set(pos_tail)
+    return {"k": kc, "v": vc, "slot_pos": sp}
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int):
+    """Full-sequence prefill: returns (last-token logits (B, V), state).
+
+    Runs the train-mode forward (streaming attention) while extracting
+    per-layer decode state: ring-buffer K/V for attention layers, final
+    recurrent state for rglru/rwkv layers.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_tokens(params, cfg, tokens)
+    if cfg.vision_seq and "vision" in batch:
+        v = batch["vision"].astype(x.dtype)
+        x = jnp.concatenate([v, x[:, v.shape[1]:]], axis=1)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _run_encoder(batch["frames"].astype(x.dtype), params, cfg)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :],
+                                 (B, S))
+    mrope_positions = batch.get("mrope_positions")
+    dtype = _dtype(cfg)
+    segs = build_segments(cfg)
+
+    caches = []
+    for si, (seg, seg_params) in enumerate(zip(segs, params["segments"])):
+
+        def body(xc, inp, seg=seg):
+            new_c = []
+            for j, sub in enumerate(seg.unit):
+                xc, _a, st = blocks_mod.block_train(
+                    xc, inp[j], cfg, sub.kind, sub.moe, window=sub.window,
+                    theta=sub.theta, positions=positions, causal=True,
+                    enc_out=enc_out, mrope_positions=mrope_positions)
+                if sub.kind in ("attn", "xattn"):
+                    new_c.append(_format_attn_cache(st, sub, cfg, S,
+                                                    max_len, dtype))
+                else:
+                    new_c.append(jax.tree.map(
+                        lambda a: a.astype(a.dtype), st))
+            return xc, tuple(new_c)
+
+        x, cache = jax.lax.scan(body, x, seg_params)
+        sub_caches = []
+        for j, sub in enumerate(seg.unit):
+            c = cache[j]
+            if sub.kind == "xattn":
+                xk, xv = _cross_kv(seg_params[j], cfg, enc_out)
+                c = dict(c, xk=xk, xv=xv)
+            sub_caches.append(c)
+        caches.append(tuple(sub_caches))
+    x = rms_norm(x, params["final_norm"])
+    logits = (x[:, -1] @ params["embed"].T).astype(jnp.float32)
+    logits = softcap(logits, cfg.logit_softcap)
+    return logits, {"caches": tuple(caches),
+                    "pos": jnp.asarray(S, jnp.int32)}

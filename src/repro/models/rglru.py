@@ -1,0 +1,92 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with input/recurrence gates is a *linear* recurrence in h, so the
+train/prefill path runs in log-depth via ``lax.associative_scan`` — the
+TPU-native formulation (the paper's GPU implementation uses a fused linear
+scan kernel; associative_scan is the XLA equivalent).  Decode keeps O(1)
+state per layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import constrain
+
+from .layers import init_dense
+
+__all__ = ["init_rglru", "rglru_scan", "rglru_step", "temporal_conv",
+           "conv_step"]
+
+_C = 8.0  # RG-LRU soft clamp constant from the paper
+
+
+def init_rglru(key, d_model: int, width: int, conv_width: int, dtype):
+    ks = jax.random.split(key, 7)
+    return {
+        # gated branch input projections
+        "w_x": init_dense(ks[0], (d_model, width), dtype),
+        "w_gate": init_dense(ks[1], (d_model, width), dtype),
+        "conv_w": init_dense(ks[2], (conv_width, width), dtype),
+        # RG-LRU gates
+        "w_input_gate": init_dense(ks[3], (width, width), dtype),
+        "w_rec_gate": init_dense(ks[4], (width, width), dtype),
+        # Lambda param: a = sigmoid(lam)^(c * r_t); init near 0.9..0.999
+        "lam": jnp.linspace(2.0, 6.0, width).astype(jnp.float32),
+        "w_out": init_dense(ks[5], (width, d_model), dtype),
+    }
+
+
+def temporal_conv(x, conv_w):
+    """Depthwise causal conv along time: x (B, S, W), conv_w (K, W)."""
+    K = conv_w.shape[0]
+    pads = [x]
+    for k in range(1, K):
+        pads.append(jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, : x.shape[1]])
+    stack = jnp.stack(pads, axis=0)  # (K, B, S, W) — k steps back
+    return jnp.einsum("kbsw,kw->bsw", stack, conv_w.astype(x.dtype))
+
+
+def conv_step(x_t, conv_state, conv_w):
+    """Decode: x_t (B, W); conv_state (B, K-1, W) holds previous inputs."""
+    K = conv_w.shape[0]
+    full = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,W)
+    out = jnp.einsum("bkw,kw->bw", full[:, ::-1], conv_w.astype(x_t.dtype))
+    return out, full[:, 1:]
+
+
+def _gates(x, params):
+    """RG-LRU gate computation (fp32): returns (a, gated_input)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_rec_gate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ params["w_input_gate"].astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(params["lam"])  # log a_t <= 0
+    a = jnp.exp(log_a)
+    gated_x = xf * i
+    # sqrt(1 - a^2) input normalizer
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * gated_x
+
+
+def rglru_scan(x, params):
+    """Full-sequence RG-LRU: x (B, S, W) -> (out (B, S, W), h_final fp32).
+    h_0 = 0; log-depth via associative_scan."""
+    x = constrain(x, "batch", None, "model")
+    a, b = _gates(x, params)  # both (B, S, W) fp32
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(x_t, h_prev, params):
+    """Decode: x_t (B, W), h_prev (B, W) fp32 -> (out, h_new)."""
+    a, b = _gates(x_t, params)
+    h = a * h_prev + b
+    return h.astype(x_t.dtype), h

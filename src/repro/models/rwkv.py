@@ -1,0 +1,159 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time-mix with
+data-dependent decay, plus squared-ReLU channel-mix.
+
+State per head is an (N, N) outer-product accumulator:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with w_t = exp(-exp(wproj(x_t))) the data-dependent decay.  The recurrence
+is not linear-associative in a small state (w_t varies per step), so the
+train path runs a time ``lax.scan`` (the paper's CUDA kernel's sequential
+semantics); decode carries O(1) state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import constrain
+
+from .layers import init_dense
+
+__all__ = ["init_rwkv_timemix", "init_rwkv_channelmix", "timemix_scan",
+           "timemix_step", "channelmix", "channelmix_step"]
+
+
+def init_rwkv_timemix(key, d_model: int, head_dim: int, dtype):
+    ks = jax.random.split(key, 8)
+    H = d_model // head_dim
+    return {
+        "mu_r": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d_model,), 0.5, jnp.float32),
+        "w_r": init_dense(ks[0], (d_model, d_model), dtype),
+        "w_k": init_dense(ks[1], (d_model, d_model), dtype),
+        "w_v": init_dense(ks[2], (d_model, d_model), dtype),
+        "w_g": init_dense(ks[3], (d_model, d_model), dtype),
+        "w_decay": init_dense(ks[4], (d_model, d_model), jnp.float32,
+                              scale=0.01 * d_model ** -0.5),
+        "decay_bias": jnp.full((d_model,), -4.0, jnp.float32),
+        "u_bonus": jnp.zeros((H, head_dim), jnp.float32),
+        "w_out": init_dense(ks[5], (d_model, d_model), dtype),
+        "ln_x": jnp.ones((d_model,), jnp.float32),  # group-norm scale
+    }
+
+
+def init_rwkv_channelmix(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d_model,), 0.5, jnp.float32),
+        "w_k": init_dense(ks[0], (d_model, d_ff), dtype),
+        "w_v": init_dense(ks[1], (d_ff, d_model), dtype),
+        "w_r": init_dense(ks[2], (d_model, d_model), dtype),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: previous token's features (B, S, d); x_prev (B, d) is
+    the last token of the previous segment (zeros at sequence start)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _projections(x, xs, p, head_dim: int):
+    B, S, d = x.shape
+    H = d // head_dim
+    r = _mix(x, xs, p["mu_r"]) @ p["w_r"]
+    k = _mix(x, xs, p["mu_k"]) @ p["w_k"]
+    v = _mix(x, xs, p["mu_v"]) @ p["w_v"]
+    g = _mix(x, xs, p["mu_g"]) @ p["w_g"]
+    wx = _mix(x, xs, p["mu_w"]).astype(jnp.float32) @ p["w_decay"]
+    w = jnp.exp(-jnp.exp(wx + p["decay_bias"]))  # (B, S, d) in (0, 1)
+    shp = (B, S, H, head_dim)
+    # keep the head axis sharded over 'model' through the recurrence
+    return tuple(
+        constrain(a.reshape(shp), "batch", None, "heads", None)
+        for a in (r, k, v)
+    ) + (g, constrain(w.reshape(shp), "batch", None, "heads", None))
+
+
+def _group_norm(y, scale, head_dim):
+    """Per-head layer norm of the wkv output (ln_x in RWKV)."""
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    yn = (y - mean) * jax.lax.rsqrt(var + 1e-5)
+    B, S, H, N = yn.shape
+    return yn.reshape(B, S, H * N) * scale
+
+
+def timemix_scan(x, x_prev, p, head_dim: int):
+    """Full-sequence time-mix.  x: (B, S, d); x_prev: (B, d).
+    Returns (out (B, S, d), S_final (B, H, N, N), x_last (B, d))."""
+    B, S, d = x.shape
+    H = d // head_dim
+    xs = _shift(x, x_prev)
+    r, k, v, g, w = _projections(x, xs, p, head_dim)
+    u = p["u_bonus"]  # (H, N)
+
+    def step(S_state, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, N) each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32),
+                        v_t.astype(jnp.float32))
+        y = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                       S_state + u[None, :, :, None] * kv)
+        S_new = w_t.astype(jnp.float32)[..., None] * S_state + kv
+        return S_new, y
+
+    S0 = jnp.zeros((B, H, head_dim, head_dim), jnp.float32)
+    S_fin, ys = jax.lax.scan(
+        step, S0,
+        (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+         v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3)),
+    )
+    y = ys.transpose(1, 0, 2, 3)  # (B, S, H, N)
+    y = _group_norm(y, p["ln_x"], head_dim).astype(x.dtype)
+    out = (y * jax.nn.silu(g)) @ p["w_out"]
+    return out, S_fin, x[:, -1, :]
+
+
+def timemix_step(x_t, state, p, head_dim: int):
+    """Decode: x_t (B, d); state = (S (B,H,N,N) fp32, x_prev (B, d))."""
+    S_state, x_prev = state
+    B, d = x_t.shape
+    H = d // head_dim
+    x3 = x_t[:, None, :]
+    xs3 = x_prev[:, None, :]
+    r, k, v, g, w = _projections(x3, xs3, p, head_dim)
+    r_t, k_t, v_t, w_t = (a[:, 0] for a in (r, k, v, w))  # (B, H, N)
+    u = p["u_bonus"]
+    kv = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32),
+                    v_t.astype(jnp.float32))
+    y = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                   S_state + u[None, :, :, None] * kv)
+    S_new = w_t.astype(jnp.float32)[..., None] * S_state + kv
+    y = _group_norm(y[:, None], p["ln_x"], head_dim)[:, 0].astype(x_t.dtype)
+    out = (y * jax.nn.silu(g[:, 0])) @ p["w_out"]
+    return out, (S_new, x_t)
+
+
+def channelmix(x, x_prev, p):
+    """x: (B, S, d); returns (out, x_last)."""
+    xs = _shift(x, x_prev)
+    k = _mix(x, xs, p["mu_k"]) @ p["w_k"]
+    r = jax.nn.sigmoid(_mix(x, xs, p["mu_r"]) @ p["w_r"])
+    out = r * (jnp.square(jax.nn.relu(k)) @ p["w_v"])
+    return out, x[:, -1, :]
+
+
+def channelmix_step(x_t, x_prev, p):
+    """Decode: x_t (B, d), x_prev (B, d) -> (out (B, d), new x_prev)."""
+    out, _ = channelmix(x_t[:, None, :], x_prev, p)
+    return out[:, 0], x_t

@@ -1,0 +1,80 @@
+"""Ambient sharding-hint context.
+
+Model code is mesh-agnostic; launchers establish a mesh context and the
+model's hot spots call ``constrain(x, 'batch', None, 'heads', None)`` with
+*logical* axis names.  Without a context (smoke tests, CPU examples) the
+calls are no-ops, so the same model code runs everywhere.
+
+Logical axes:
+  'batch'  -> the ('pod','data') prefix that divides the dim
+  'model'  -> 'model' if it divides the dim
+  'heads'  -> alias of 'model' (reads better at call sites)
+  None     -> unsharded
+
+This is the mechanism behind the §Perf hillclimb: explicit constraints at
+attention/MoE/recurrence boundaries remove GSPMD's "involuntary full
+rematerialization" reshards (verified to cut the gemma2-9b train step's
+traffic and collective terms; see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["use_mesh", "constrain", "current_mesh", "hints_enabled"]
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_STATE, "mesh", None)
+
+
+def hints_enabled() -> bool:
+    return getattr(_STATE, "mesh", None) is not None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None):
+    """Enable sharding hints under ``mesh`` (None = disable)."""
+    prev = getattr(_STATE, "mesh", None)
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def _resolve(axis, dim: int, mesh: Mesh):
+    if axis is None:
+        return None
+    if axis == "batch":
+        chosen = []
+        prod = 1
+        for a in ("pod", "data"):
+            sz = mesh.shape.get(a, 0)
+            if sz and dim % (prod * sz) == 0:
+                chosen.append(a)
+                prod *= sz
+        if not chosen:
+            return None
+        return tuple(chosen) if len(chosen) > 1 else chosen[0]
+    name = "model" if axis in ("model", "heads") else axis
+    sz = mesh.shape.get(name, 0)
+    return name if sz and dim % sz == 0 else None
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint with logical axes; no-op without a mesh
+    context or when an axis does not divide."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"{len(axes)} axes for rank-{x.ndim} array")
+    spec = P(*(_resolve(a, d, mesh) for a, d in zip(axes, x.shape)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,204 @@
+"""Sharding rules: parameter, batch, and decode-state PartitionSpecs.
+
+Mesh axes: ('data', 'model') single-pod; ('pod', 'data', 'model') multi-pod.
+
+Policy (DESIGN.md §6):
+  * Params: TP along 'model' (heads / ffn hidden / expert axis) + FSDP
+    along 'data' (d_model or the complementary axis).  Params are
+    *replicated* across 'pod' — the only cross-pod collective is the
+    gradient all-reduce (the cheapest thing to put on DCN).
+  * Activations: batch over ('pod', 'data') when divisible.
+  * Decode caches: batch over 'data' when divisible; for global_batch=1
+    long-context cells the cache length axis shards over 'data'
+    (sequence-parallel KV) instead.
+  * Head axes shard over 'model' only when divisible; otherwise head_dim
+    takes the shard (KV-head counts of 1/2/8 vs model=16).
+"""
+
+from __future__ import annotations
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import ModelConfig
+
+__all__ = ["param_specs", "batch_specs", "decode_state_specs",
+           "named", "tree_named"]
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _maybe(mesh, dim_size, axis):
+    """Axis name if it divides the dim, else None."""
+    return axis if _div(dim_size, _axis_size(mesh, axis)) else None
+
+
+def param_specs(params, cfg: ModelConfig, mesh: Mesh):
+    """Pytree of PartitionSpec matching ``params``."""
+    import jax
+
+    model = "model"
+    data = "data"
+    msz = _axis_size(mesh, model)
+    dsz = _axis_size(mesh, data)
+
+    def spec_for(path, leaf) -> P:
+        names = [str(getattr(p, "key", getattr(p, "idx", p)))
+                 for p in path]
+        name = names[-1]
+        # leading stacked axes: segments -> (repeats, ...); encoder blocks
+        stacked = ("segments" in names) or ("blocks" in names)
+        lead = (None,) if stacked else ()
+        shape = leaf.shape[1:] if stacked else leaf.shape
+
+        def pspec(*rest):
+            return P(*(lead + rest))
+
+        if name == "embed":
+            return P(_maybe(mesh, leaf.shape[0], model),
+                     _maybe(mesh, leaf.shape[1], data))
+        if name in ("wq", "wk", "wv"):       # (d, H, hd)
+            d, H, hd = shape
+            if _div(H, msz):
+                return pspec(_maybe(mesh, d, data), model, None)
+            return pspec(_maybe(mesh, d, data), None,
+                         _maybe(mesh, hd, model))
+        if name == "wo":                      # (H, hd, d)
+            H, hd, d = shape
+            if _div(H, msz):
+                return pspec(model, None, _maybe(mesh, d, data))
+            return pspec(None, _maybe(mesh, hd, model),
+                         _maybe(mesh, d, data))
+        if name in ("bq", "bk", "bv"):        # (H, hd)
+            H, hd = shape
+            if _div(H, msz):
+                return pspec(model, None)
+            return pspec(None, _maybe(mesh, hd, model))
+        if name in ("w_gate", "w_up"):
+            if len(shape) == 3:               # moe (E, d, ff): EP + FSDP(d)
+                # (§Perf kimi iteration 3, REFUTED: replicating d across
+                # 'data' left the combine all-reduce unchanged and grew
+                # per-device argument bytes 16x — EP+FSDP stays.)
+                E, d, ff = shape
+                return pspec(_maybe(mesh, E, model),
+                             _maybe(mesh, d, data), None)
+            d, ff = shape                     # dense (d, ff)
+            return pspec(_maybe(mesh, d, data), _maybe(mesh, ff, model))
+        if name == "w_down":
+            if len(shape) == 3:               # moe (E, ff, d)
+                E, ff, d = shape
+                return pspec(_maybe(mesh, E, model), None,
+                             _maybe(mesh, d, data))
+            ff, d = shape
+            return pspec(_maybe(mesh, ff, model), _maybe(mesh, d, data))
+        if name == "router":                  # (d, E)
+            d, E = shape
+            return pspec(_maybe(mesh, d, data), _maybe(mesh, E, model))
+        if name in ("w_x",):                  # rglru (d, W)
+            d, W = shape
+            return pspec(_maybe(mesh, d, data), _maybe(mesh, W, model))
+        if name in ("w_input_gate", "w_rec_gate"):  # (W, W)
+            W1, W2 = shape
+            return pspec(_maybe(mesh, W1, data), _maybe(mesh, W2, model))
+        if name == "w_out":                   # (W|d, d)
+            a, d = shape
+            return pspec(_maybe(mesh, a, model), _maybe(mesh, d, data))
+        if name == "conv_w":                  # (K, W)
+            return pspec(None, _maybe(mesh, shape[1], model))
+        if name == "lam":                     # (W,)
+            return pspec(_maybe(mesh, shape[0], model))
+        if name in ("w_r", "w_k", "w_v", "w_g", "w_decay"):  # rwkv (d, *)
+            a, b = shape
+            return pspec(_maybe(mesh, a, data), _maybe(mesh, b, model))
+        # everything small: norms, mu_*, biases, u_bonus, ln_x, decay_bias
+        return pspec(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def _batch_axes(mesh: Mesh, B: int):
+    """Largest prefix of ('pod','data') whose product divides B."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    prod = 1
+    chosen = []
+    for a in axes:
+        if _div(B, prod * mesh.shape[a]):
+            chosen.append(a)
+            prod *= mesh.shape[a]
+    if not chosen:
+        return None
+    return tuple(chosen) if len(chosen) > 1 else chosen[0]
+
+
+def batch_specs(batch, cfg: ModelConfig, mesh: Mesh):
+    """Specs for a train/prefill batch dict keyed by field name."""
+    specs = {}
+    for k, v in batch.items():
+        if k == "mrope_positions":            # (3, B, S)
+            specs[k] = P(None, _batch_axes(mesh, v.shape[1]), None)
+        elif v.ndim == 1:                     # (B,) decode tokens
+            specs[k] = P(_batch_axes(mesh, v.shape[0]))
+        elif v.ndim == 2:                     # (B, S)
+            specs[k] = P(_batch_axes(mesh, v.shape[0]), None)
+        else:                                 # (B, S, d) frames/vision
+            specs[k] = P(_batch_axes(mesh, v.shape[0]), None, None)
+    return specs
+
+
+def decode_state_specs(state, cfg: ModelConfig, mesh: Mesh):
+    """Specs for the decode-state pytree (stacked caches)."""
+    import jax
+
+    msz = _axis_size(mesh, "model")
+
+    def spec_for(path, leaf) -> P:
+        names = [str(getattr(p, "key", getattr(p, "idx", p)))
+                 for p in path]
+        name = names[-1]
+        if name == "pos" or leaf.ndim == 0:
+            return P()
+        if name == "slot_pos":                # (repeats, CL)
+            return P(None, None)
+        B = leaf.shape[1]
+        bax = _batch_axes(mesh, B)
+        if name in ("k", "v"):                # (repeats, B, CL, KV, hd)
+            _r, _b, CL, KV, hd = leaf.shape
+            kv_ax = "model" if _div(KV, msz) else None
+            hd_ax = None if kv_ax else _maybe(mesh, hd, "model")
+            if bax is None:
+                # long-context, batch=1: sequence-parallel cache
+                return P(None, None, _maybe(mesh, CL, "data"), kv_ax, hd_ax)
+            return P(None, bax, None, kv_ax, hd_ax)
+        if name in ("xk", "xv"):              # (repeats, B, Se, KV, hd)
+            _r, _b, Se, KV, hd = leaf.shape
+            kv_ax = "model" if _div(KV, msz) else None
+            hd_ax = None if kv_ax else _maybe(mesh, hd, "model")
+            return P(None, bax, None, kv_ax, hd_ax)
+        if name == "h":                       # (repeats, B, W)
+            return P(None, bax, _maybe(mesh, leaf.shape[2], "model"))
+        if name == "conv":                    # (repeats, B, K-1, W)
+            return P(None, bax, None, _maybe(mesh, leaf.shape[3], "model"))
+        if name == "S":                       # (repeats, B, H, N, N)
+            return P(None, bax, _maybe(mesh, leaf.shape[2], "model"),
+                     None, None)
+        if name in ("x_tm", "x_cm"):          # (repeats, B, d)
+            return P(None, bax, _maybe(mesh, leaf.shape[2], "model"))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_for, state)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_named(mesh: Mesh, specs):
+    import jax
+
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

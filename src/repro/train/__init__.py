@@ -1,0 +1,19 @@
+"""Training/serving substrate: optimizer, step factories, data,
+checkpointing, fault tolerance, gradient compression."""
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update, global_norm
+from .train_step import (
+    TrainConfig,
+    init_train_state,
+    make_serve_steps,
+    make_train_step,
+)
+from .data import DataConfig, SyntheticLMData, make_batch
+from . import checkpoint, compression, fault
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+    "TrainConfig", "init_train_state", "make_serve_steps",
+    "make_train_step", "DataConfig", "SyntheticLMData", "make_batch",
+    "checkpoint", "compression", "fault",
+]

@@ -1,0 +1,79 @@
+"""Gradient compression for cross-pod synchronization (beyond-paper
+distributed-optimization trick).
+
+Cross-pod (DCN) bandwidth is the scarcest link in a multi-pod mesh, so the
+pod-axis gradient all-reduce is the natural place to compress.  We use
+int8 block quantization with **error feedback**: the quantization residual
+is carried to the next step, so compression error accumulates to zero
+instead of biasing the update (Karimireddy et al., 2019).
+
+Two entry points:
+  * ``compress_decompress`` — the numerics, usable inside any jit'd step
+    (simulates the compressed collective's end-to-end effect: 4x fewer
+    bytes on the wire).
+  * ``compressed_psum`` — the explicit collective for a shard_map'd step:
+    quantize -> psum(int32 accumulate) -> dequantize.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compress_decompress",
+           "compressed_psum", "init_error_state"]
+
+_BLOCK = 256
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % _BLOCK
+    return jnp.pad(x.reshape(-1), (0, pad)), n
+
+
+def quantize_int8(g):
+    """Per-block symmetric int8 quantization: returns (q, scales, n)."""
+    flat, n = _pad_to_block(g.astype(jnp.float32))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, n
+
+
+def dequantize_int8(q, scale, n, shape):
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return deq.reshape(shape)
+
+
+def compress_decompress(g, err):
+    """Error-feedback round trip: returns (g_hat, new_err)."""
+    corrected = g.astype(jnp.float32) + err
+    q, scale, n = quantize_int8(corrected)
+    g_hat = dequantize_int8(q, scale, n, g.shape)
+    return g_hat.astype(g.dtype), corrected - g_hat
+
+
+def compressed_psum(g, err, axis_name: str):
+    """Quantized all-reduce over ``axis_name`` with error feedback.
+
+    Inside shard_map: each participant quantizes its (error-corrected)
+    local gradient to int8 and all-gathers the int8 payload + per-block
+    fp32 scales (wire volume ~= 1 byte/element vs 4 for an fp32
+    all-reduce); the weighted sum ``sum_i q_i * s_i`` is then exact local
+    arithmetic.  With a small axis (pods), this is both cheaper on the
+    wire and bit-exact in reconstruction."""
+    corrected = g.astype(jnp.float32) + err
+    q, scale, n = quantize_int8(corrected)
+    local = dequantize_int8(q, scale, n, g.shape)
+    new_err = corrected - local
+    q_all = jax.lax.all_gather(q, axis_name)          # (P, blocks, B) int8
+    s_all = jax.lax.all_gather(scale, axis_name)      # (P, blocks, 1) fp32
+    summed = jnp.einsum("pbk,pbo->bk", q_all.astype(jnp.float32), s_all)
+    deq = summed.reshape(-1)[:n].reshape(g.shape)
+    return deq.astype(g.dtype), new_err
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,120 @@
+"""Train / serve step factories.
+
+``make_train_step`` builds a jit-able step:
+  * remat (activation checkpointing) policy through the model's scan
+  * optional microbatch gradient accumulation (lax.scan over microbatches)
+  * optional int8 error-feedback gradient compression (simulating the
+    compressed cross-pod all-reduce's numerics; the explicit collective
+    variant lives in compression.compressed_psum)
+  * AdamW with clipping + warmup
+
+``make_serve_steps`` builds (prefill_fn, decode_fn).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, decode_step, loss_fn, prefill
+from . import compression
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["TrainConfig", "make_train_step", "init_train_state",
+           "make_serve_steps"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    remat: bool = True
+    microbatch: int = 1          # gradient-accumulation factor
+    loss_chunk: int = 512
+    compress_grads: bool = False  # int8 error-feedback compression
+
+
+def init_train_state(params, tc: TrainConfig) -> dict:
+    state = {"opt": adamw_init(params, tc.optimizer)}
+    if tc.compress_grads:
+        state["err"] = compression.init_error_state(params)
+    return state
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """Returns step(params, state, batch) -> (params, state, metrics)."""
+
+    def loss_of(params, batch):
+        return loss_fn(params, cfg, batch, remat=tc.remat,
+                       loss_chunk=tc.loss_chunk)
+
+    def grads_of(params, batch):
+        if tc.microbatch <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        # microbatch accumulation: split the batch leading axis and scan
+        def reshape_mb(x):
+            B = x.shape[0]
+            assert B % tc.microbatch == 0, (B, tc.microbatch)
+            return x.reshape(tc.microbatch, B // tc.microbatch,
+                             *x.shape[1:])
+
+        # mrope positions carry batch on axis 1
+        mb_batch = {
+            k: (v.transpose(1, 0, 2, 3) if k == "mrope_positions" else v)
+            for k, v in batch.items()}
+        mb_batch = jax.tree.map(reshape_mb, mb_batch)
+        mb_batch = {
+            k: (v.transpose(0, 2, 1, 3) if k == "mrope_positions" else v)
+            for k, v in mb_batch.items()}
+
+        def mb_step(carry, mb):
+            loss_acc, grads_acc = carry
+            (loss, _m), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, mb)
+            grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+            return (loss_acc + loss, grads_acc), None
+
+        zero_grads = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), _ = jax.lax.scan(
+            mb_step, (jnp.zeros(()), zero_grads), mb_batch)
+        inv = 1.0 / tc.microbatch
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        loss = loss_sum * inv
+        return loss, {"xent": loss}, grads
+
+    def step(params, state, batch):
+        loss, metrics, grads = grads_of(params, batch)
+        if tc.compress_grads:
+            flat_g, tdef = jax.tree.flatten(grads)
+            flat_e = tdef.flatten_up_to(state["err"])
+            pairs = [compression.compress_decompress(g, e)
+                     for g, e in zip(flat_g, flat_e)]
+            grads = tdef.unflatten([p[0] for p in pairs])
+            err = tdef.unflatten([p[1] for p in pairs])
+        params, opt, opt_metrics = adamw_update(
+            params, grads, state["opt"], tc.optimizer)
+        new_state = {"opt": opt}
+        if tc.compress_grads:
+            new_state["err"] = err
+        return params, new_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return step
+
+
+def make_serve_steps(cfg: ModelConfig, max_len: int):
+    """Returns (prefill_fn(params, batch), decode_fn(params, state, tokens))."""
+
+    def prefill_fn(params, batch):
+        return prefill(params, cfg, batch, max_len=max_len)
+
+    def decode_fn(params, state, tokens):
+        return decode_step(params, cfg, state, tokens)
+
+    return prefill_fn, decode_fn

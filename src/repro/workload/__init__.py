@@ -1,0 +1,20 @@
+"""Workload substrate: trace generators, cost models, LM-job adapters."""
+
+from .cost_models import homogeneous_cost, heterogeneous_cost, gce_like_cost
+from .synthetic import synthetic_instance, SyntheticSpec
+from .gct import gct_like_instance, load_trace_csv
+from .jobs import (
+    DEFAULT_SCHEDULE,
+    Job,
+    TPU_SKUS,
+    fleet_problem,
+    jobs_from_dryrun,
+)
+
+__all__ = [
+    "homogeneous_cost", "heterogeneous_cost", "gce_like_cost",
+    "synthetic_instance", "SyntheticSpec",
+    "gct_like_instance", "load_trace_csv",
+    "DEFAULT_SCHEDULE", "Job", "TPU_SKUS", "fleet_problem",
+    "jobs_from_dryrun",
+]

@@ -1,0 +1,147 @@
+"""LM-job -> TL-task adapter: the operational link between the framework
+and the paper's planner.
+
+A *job* is "run (arch x shape) during a time window" — e.g. "train
+gemma2-9b nightly 00-06", "serve qwen2.5-3b 08-18".  Its resource demand
+vector is **measured from the multi-pod dry-run artifacts** (per-device
+argument+temp bytes x devices), converted into (chips, HBM GB, host GB).
+Jobs wider than the largest slice SKU are split into per-pod tasks with
+identical windows (a data-parallel pod is the unit of placement, matching
+how multi-pod meshes are scheduled in practice).
+
+Node-types are TPU slice SKUs; cost uses a committed-use-style sublinear
+per-chip rate (bigger slices are cheaper per chip) — the heterogeneous
+cost model of paper §VI-C with e < 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import math
+import os
+
+import numpy as np
+
+from repro.core import NodeTypes, Problem
+
+__all__ = ["TPU_SKUS", "Job", "DEFAULT_SCHEDULE", "jobs_from_dryrun",
+           "fleet_problem", "BUILTIN_DEMANDS"]
+
+HBM_PER_CHIP_GB = 16.0
+HOST_PER_CHIP_GB = 32.0
+CHIP_HOUR_USD = 1.2
+
+# (name, chips) — host/HBM follow the chip count; cost is sublinear in
+# size (committed-use volume discount, exponent e=0.92)
+_SKU_CHIPS = [8, 16, 32, 64, 128, 256]
+
+
+def _mk_skus() -> NodeTypes:
+    cap = np.array([[c, c * HBM_PER_CHIP_GB, c * HOST_PER_CHIP_GB]
+                    for c in _SKU_CHIPS], dtype=float)
+    cost = np.array([CHIP_HOUR_USD * (c ** 0.92) for c in _SKU_CHIPS])
+    names = tuple(f"v5e-{c}" for c in _SKU_CHIPS)
+    return NodeTypes(cap=cap, cost=cost, names=names)
+
+
+TPU_SKUS = _mk_skus()
+
+
+@dataclasses.dataclass(frozen=True)
+class Job:
+    name: str
+    arch: str
+    shape: str
+    start_h: int
+    end_h: int          # inclusive hour slot
+
+
+# a plausible production day: nightly training, business-hours serving,
+# evening batch inference, always-on light service
+DEFAULT_SCHEDULE = (
+    Job("nightly-train-gemma2", "gemma2-9b", "train_4k", 0, 5),
+    Job("nightly-train-olmoe", "olmoe-1b-7b", "train_4k", 0, 5),
+    Job("nightly-train-rwkv", "rwkv6-7b", "train_4k", 1, 6),
+    Job("day-serve-qwen", "qwen2.5-3b", "decode_32k", 8, 17),
+    Job("day-serve-gemma3", "gemma3-1b", "decode_32k", 8, 17),
+    Job("day-serve-vl", "qwen2-vl-2b", "decode_32k", 9, 18),
+    Job("eve-batch-whisper", "whisper-small", "prefill_32k", 18, 22),
+    Job("eve-batch-granite", "granite-34b", "prefill_32k", 18, 23),
+    Job("allday-recgemma", "recurrentgemma-9b", "long_500k", 0, 23),
+    Job("peak-kimi-serve", "kimi-k2-1t-a32b", "decode_32k", 10, 15),
+)
+
+# fallback per-(arch, shape) total memory footprints (GB across the whole
+# job) if dry-run artifacts are absent — same order of magnitude as the
+# measured ones
+BUILTIN_DEMANDS = {
+    ("gemma2-9b", "train_4k"): 1600.0,
+    ("olmoe-1b-7b", "train_4k"): 1100.0,
+    ("rwkv6-7b", "train_4k"): 1200.0,
+    ("qwen2.5-3b", "decode_32k"): 700.0,
+    ("gemma3-1b", "decode_32k"): 300.0,
+    ("qwen2-vl-2b", "decode_32k"): 500.0,
+    ("whisper-small", "prefill_32k"): 150.0,
+    ("granite-34b", "prefill_32k"): 900.0,
+    ("recurrentgemma-9b", "long_500k"): 250.0,
+    ("kimi-k2-1t-a32b", "decode_32k"): 4000.0,
+}
+
+
+def _dryrun_bytes(dryrun_dir: str) -> dict:
+    """(arch, shape) -> total program bytes, from 16x16 artifacts."""
+    out = {}
+    for path in glob.glob(os.path.join(dryrun_dir, "*__16x16.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        per_dev = (rec.get("argument_size_in_bytes", 0)
+                   + rec.get("temp_size_in_bytes", 0)
+                   + rec.get("output_size_in_bytes", 0))
+        out[(rec["arch"], rec["shape"])] = per_dev * rec["devices"]
+    return out
+
+
+def jobs_from_dryrun(schedule=DEFAULT_SCHEDULE,
+                     dryrun_dir: str = "results/dryrun",
+                     util: float = 0.85):
+    """Expand jobs into TL tasks: demands (chips, HBM GB, host GB)."""
+    measured = _dryrun_bytes(dryrun_dir)
+    max_chips = max(_SKU_CHIPS)
+    tasks = []
+    for job in schedule:
+        key = (job.arch, job.shape)
+        if key in measured:
+            total_gb = measured[key] / 1e9
+            src = "dryrun"
+        else:
+            total_gb = BUILTIN_DEMANDS.get(key, 500.0)
+            src = "builtin"
+        chips = max(1, math.ceil(total_gb / (HBM_PER_CHIP_GB * util)))
+        n_shards = max(1, math.ceil(chips / max_chips))
+        per_shard = math.ceil(chips / n_shards)
+        for s in range(n_shards):
+            tasks.append({
+                "name": f"{job.name}/{s}" if n_shards > 1 else job.name,
+                "dem": np.array([
+                    per_shard,
+                    per_shard * HBM_PER_CHIP_GB * 0.95,
+                    per_shard * HOST_PER_CHIP_GB * 0.5,
+                ]),
+                "start": job.start_h,
+                "end": job.end_h,
+                "source": src,
+            })
+    return tasks
+
+
+def fleet_problem(schedule=DEFAULT_SCHEDULE,
+                  dryrun_dir: str = "results/dryrun") -> tuple[Problem, list]:
+    tasks = jobs_from_dryrun(schedule, dryrun_dir)
+    dem = np.stack([t["dem"] for t in tasks])
+    start = np.array([t["start"] for t in tasks])
+    end = np.array([t["end"] for t in tasks])
+    problem = Problem(dem=dem, start=start, end=end, node_types=TPU_SKUS,
+                      T=24)
+    return problem, tasks

@@ -1,0 +1,51 @@
+"""Synthetic benchmark generator (paper §VI-A, Table I).
+
+Each of the D components of demand and capacity is uniform i.i.d. in its
+interval; each task's span [s, e] is uniform over [1, T] (we draw two
+uniform slots and order them).  Defaults follow Table I:
+
+    n=1000, m=10, T=24, D=5, capacity ~ U[0.2, 1.0], demand ~ U[0.01, 0.1].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import NodeTypes, Problem
+from .cost_models import heterogeneous_cost, homogeneous_cost
+
+__all__ = ["SyntheticSpec", "synthetic_instance"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticSpec:
+    n: int = 1000
+    m: int = 10
+    D: int = 5
+    T: int = 24
+    demand: tuple[float, float] = (0.01, 0.1)
+    capacity: tuple[float, float] = (0.2, 1.0)
+    cost_model: str = "homogeneous"  # 'homogeneous' | 'heterogeneous'
+    e: float = 1.0                   # heterogeneous cost exponent
+    seed: int = 0
+
+
+def synthetic_instance(spec: SyntheticSpec = SyntheticSpec()) -> Problem:
+    rng = np.random.default_rng(spec.seed)
+    cap = rng.uniform(*spec.capacity, size=(spec.m, spec.D))
+    if spec.cost_model == "homogeneous":
+        cost = homogeneous_cost(cap)
+    elif spec.cost_model == "heterogeneous":
+        cost = heterogeneous_cost(cap, e=spec.e, rng=rng)
+    else:
+        raise ValueError(f"unknown cost model {spec.cost_model!r}")
+    dem = rng.uniform(*spec.demand, size=(spec.n, spec.D))
+    a = rng.integers(0, spec.T, size=spec.n)
+    b = rng.integers(0, spec.T, size=spec.n)
+    start, end = np.minimum(a, b), np.maximum(a, b)
+    return Problem(
+        dem=dem, start=start, end=end,
+        node_types=NodeTypes(cap=cap, cost=cost), T=spec.T,
+    )

@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests: reduced same-family configs run a forward
+/train step and a decode step on CPU; shapes + finiteness asserted.
+The full configs are exercised only via the dry-run (no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, cell_eligible, cells, get_config, \
+    smoke_config
+from repro.models import (
+    build_segments,
+    decode_step,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.models.model import _run_encoder
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 12
+
+
+def _batch(cfg):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], -jnp.ones((B, 1), jnp.int32)], axis=1)
+    batch = {"tokens": tokens, "labels": labels}
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(
+            KEY, (B, cfg.encoder_seq, cfg.d_model))
+    if cfg.vision_seq:
+        batch["vision"] = jax.random.normal(
+            KEY, (B, cfg.vision_seq, cfg.d_model))
+        batch["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, None, :], (3, B, S))
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+class TestArchSmoke:
+    def test_train_step_finite(self, arch):
+        cfg = smoke_config(arch)
+        params = init_params(KEY, cfg)
+        batch = _batch(cfg)
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss)), arch
+        gnorm = jax.tree.reduce(
+            lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))),
+            grads, jnp.zeros(()))
+        assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0, arch
+
+    def test_decode_step_shapes(self, arch):
+        cfg = smoke_config(arch)
+        params = init_params(KEY, cfg)
+        batch = _batch(cfg)
+        enc_out = (_run_encoder(batch["frames"].astype(jnp.float32),
+                                params, cfg)
+                   if cfg.encoder_layers else None)
+        state = init_decode_state(params, cfg, B, 16, enc_out=enc_out)
+        logits, state = decode_step(params, cfg, state, batch["tokens"][:, 0])
+        assert logits.shape == (B, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all()), arch
+        assert int(state["pos"]) == 1
+
+    def test_segments_cover_all_layers(self, arch):
+        cfg = get_config(arch)
+        segs = build_segments(cfg)
+        assert sum(s.layers for s in segs) == cfg.num_layers
+
+
+@pytest.mark.parametrize(
+    "arch", ["gemma3-1b", "gemma2-9b", "recurrentgemma-9b", "rwkv6-7b",
+             "whisper-small"])
+def test_prefill_decode_parity(arch):
+    """Prefill then single-step decode must agree with pure decode-from-
+    scratch: exercises ring-buffer caches, recurrent state extraction and
+    cross-attention K/V precompute."""
+    cfg = smoke_config(arch)
+    params = init_params(KEY, cfg)
+    batch = _batch(cfg)
+    logits_p, _state = prefill(params, cfg, batch, max_len=16)
+    enc_out = (_run_encoder(batch["frames"].astype(jnp.float32), params, cfg)
+               if cfg.encoder_layers else None)
+    state = init_decode_state(params, cfg, B, 16, enc_out=enc_out)
+    lg = None
+    for t in range(S):
+        lg, state = decode_step(params, cfg, state, batch["tokens"][:, t])
+    err = float(jnp.max(jnp.abs(lg - logits_p)))
+    assert err < 5e-3, (arch, err)
+
+
+class TestCellGrid:
+    def test_40_cells(self):
+        assert len(cells(include_skipped=True)) == 40
+
+    def test_long500k_eligibility(self):
+        eligible = {a for a, s, ok, _w in cells(include_skipped=True)
+                    if s == "long_500k" and ok}
+        assert eligible == {"gemma3-1b", "recurrentgemma-9b", "rwkv6-7b"}
+
+    def test_param_counts_match_names(self):
+        """Sanity: billions in the name ~ the config's param count."""
+        expect = {
+            "gemma3-1b": (0.7, 1.6), "gemma2-9b": (8, 11),
+            "qwen2.5-3b": (2.5, 4), "granite-34b": (30, 38),
+            "recurrentgemma-9b": (7.5, 11), "olmoe-1b-7b": (6, 8),
+            "kimi-k2-1t-a32b": (900, 1150), "whisper-small": (0.2, 0.45),
+            "qwen2-vl-2b": (1.2, 2.3), "rwkv6-7b": (6, 8.5),
+        }
+        for arch, (lo, hi) in expect.items():
+            pc = get_config(arch).param_count() / 1e9
+            assert lo <= pc <= hi, (arch, pc)
+
+    def test_kimi_active_params(self):
+        cfg = get_config("kimi-k2-1t-a32b")
+        act = cfg.active_param_count() / 1e9
+        assert 25 <= act <= 40, act

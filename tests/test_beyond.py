@@ -1,0 +1,163 @@
+"""Beyond-paper components: PDHG LP solver, concentration rounding,
+node-elimination local search."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    concentration_rounding,
+    eliminate_nodes,
+    lp_lowerbound,
+    rightsize,
+    solve_lp,
+    solve_lp_pdhg,
+    trim_timeline,
+    two_phase,
+    verify,
+)
+from repro.workload import SyntheticSpec, gct_like_instance, \
+    synthetic_instance
+
+
+class TestPDHG:
+    def test_converges_to_highs_objective(self):
+        p = synthetic_instance(SyntheticSpec(n=150, m=5, D=3, seed=1))
+        t, _ = trim_timeline(p)
+        exact = solve_lp(t).objective
+        res = solve_lp_pdhg(t, iters=3000)
+        # primal upper-bounds, dual lower-bounds the LP optimum
+        assert res.lower_bound <= exact + 1e-3 * exact
+        assert res.objective >= exact - 1e-3 * exact
+        gap = (res.objective - res.lower_bound) / exact
+        assert gap < 0.08, (res.objective, res.lower_bound, exact)
+
+    def test_dual_is_valid_lower_bound_on_opt(self):
+        p = synthetic_instance(SyntheticSpec(n=100, m=4, D=2, seed=2))
+        t, _ = trim_timeline(p)
+        res = solve_lp_pdhg(t, iters=1500)
+        cost = rightsize(t, "lp-map-f").cost(t)
+        assert res.lower_bound <= cost + 1e-6
+
+    def test_mapping_is_placeable(self):
+        p = synthetic_instance(SyntheticSpec(n=120, m=4, D=3, seed=3))
+        t, _ = trim_timeline(p)
+        res = solve_lp_pdhg(t, iters=800)
+        sol = two_phase(t, res.mapping, fit="first")
+        verify(t, sol)
+
+    def test_cumsum_operator_matches_dense(self):
+        """The O(n+T) difference-array operators must produce the same
+        iterates as the dense mask-matmul form."""
+        p = synthetic_instance(SyntheticSpec(n=90, m=4, D=3, seed=4))
+        t, _ = trim_timeline(p)
+        a = solve_lp_pdhg(t, iters=400, operator="cumsum")
+        b = solve_lp_pdhg(t, iters=400, operator="dense")
+        np.testing.assert_allclose(a.objective, b.objective,
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(a.x, b.x, rtol=1e-3, atol=1e-4)
+
+    def test_cumsum_fwd_adjoint_consistency(self):
+        """<fwd(x), y> == <x, adj(y)> (adjointness) on random tensors."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.lp_pdhg import (
+            _congestion_adj_cumsum,
+            _congestion_fwd_cumsum,
+        )
+
+        rng = np.random.default_rng(0)
+        n, Tp, D = 40, 25, 3
+        start = jnp.asarray(rng.integers(0, Tp, n), jnp.int32)
+        end = jnp.asarray(
+            np.minimum(np.asarray(start) + rng.integers(0, 10, n), Tp - 1),
+            jnp.int32)
+        w = jnp.asarray(rng.random((n, D)), jnp.float32)
+        x = jnp.asarray(rng.random(n), jnp.float32)
+        y = jnp.asarray(rng.random((Tp, D)), jnp.float32)
+        lhs = float(jnp.sum(_congestion_fwd_cumsum(x, w, start, end, Tp)
+                            * y))
+        rhs = float(jnp.sum(x * _congestion_adj_cumsum(y, w, start, end)))
+        assert abs(lhs - rhs) / max(abs(lhs), 1e-9) < 1e-5
+
+
+class TestConcentrationRounding:
+    def test_produces_feasible_mapping(self):
+        g = gct_like_instance(n=300, m=8, seed=5)
+        t, _ = trim_timeline(g)
+        lp = solve_lp(t)
+        mapping = concentration_rounding(t, lp.x)
+        sol = two_phase(t, mapping, fit="first", filling=True)
+        verify(t, sol)
+
+    def test_comparable_to_argmax(self):
+        """Measured honestly: concentration rounding is a wash vs argmax +
+        filling on the GCT emulation (within 10% either way, wins some
+        seeds); the consistent beyond-paper win is the local search
+        (TestLocalSearch.test_consistent_gain)."""
+        ratios = []
+        for seed in range(3):
+            g = gct_like_instance(n=300, m=8, seed=seed)
+            t, _ = trim_timeline(g)
+            lp = solve_lp(t)
+            argmax_sol = two_phase(t, lp.mapping, fit="first", filling=True)
+            conc_sol = two_phase(
+                t, concentration_rounding(t, lp.x), fit="first",
+                filling=True)
+            ratios.append(conc_sol.cost(t) / argmax_sol.cost(t))
+        assert np.mean(ratios) < 1.10, ratios
+
+    def test_local_search_consistent_gain_over_lp_map_f(self):
+        """argmax + filling + node elimination: the measured 12-16% gain
+        (EXPERIMENTS.md §Perf beyond-paper)."""
+        gains = []
+        for seed in range(3):
+            g = gct_like_instance(n=300, m=8, seed=seed)
+            t, _ = trim_timeline(g)
+            lp = solve_lp(t)
+            base = two_phase(t, lp.mapping, fit="first", filling=True)
+            ls = eliminate_nodes(t, base)
+            verify(t, ls)
+            gains.append(1.0 - ls.cost(t) / base.cost(t))
+        assert np.mean(gains) >= 0.05, gains
+
+
+class TestLocalSearch:
+    def test_never_increases_cost_and_stays_feasible(self):
+        for seed in range(3):
+            p = synthetic_instance(SyntheticSpec(n=150, m=5, D=3,
+                                                 seed=seed))
+            t, _ = trim_timeline(p)
+            sol = rightsize(t, "penalty-map")
+            improved = eliminate_nodes(t, sol)
+            verify(t, improved)
+            assert improved.cost(t) <= sol.cost(t) + 1e-9
+
+    def test_eliminates_obviously_wasteful_node(self):
+        """Two tiny tasks forced onto two nodes by a bad mapping; local
+        search must merge them."""
+        import numpy as np
+
+        from repro.core import NodeTypes, Problem, Solution
+
+        nt = NodeTypes(cap=np.array([[1.0]]), cost=np.array([1.0]))
+        p = Problem(dem=np.array([[0.3], [0.3]]), start=np.array([0, 0]),
+                    end=np.array([0, 0]), node_types=nt, T=1)
+        bad = Solution(node_type=np.array([0, 0]),
+                       assign=np.array([0, 1]))
+        verify(p, bad)
+        fixed = eliminate_nodes(p, bad)
+        verify(p, fixed)
+        assert fixed.num_nodes == 1
+        assert fixed.cost(p) == pytest.approx(1.0)
+
+    def test_improves_lp_map_on_gct(self):
+        g = gct_like_instance(n=400, m=10, seed=7)
+        t, _ = trim_timeline(g)
+        sol = rightsize(t, "lp-map")
+        ls = eliminate_nodes(t, sol)
+        verify(t, ls)
+        lb = lp_lowerbound(t)
+        assert ls.cost(t) <= sol.cost(t)
+        # report-style sanity: normalized cost must stay sane
+        assert ls.cost(t) / lb < 2.0

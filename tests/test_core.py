@@ -1,0 +1,253 @@
+"""Unit tests for the TL-Rightsizing core (paper §II-§V)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    NodeTypes,
+    Problem,
+    Solution,
+    active_mask,
+    congestion_lowerbound,
+    evaluate,
+    feasible_types,
+    lp_lowerbound,
+    no_timeline_lowerbound,
+    penalty_map,
+    penalty_matrix,
+    relative_demand,
+    rightsize,
+    solve_lp,
+    trim_timeline,
+    two_phase,
+    verify,
+)
+from repro.workload import SyntheticSpec, gct_like_instance, synthetic_instance
+
+
+def small_problem():
+    """A Figure-1-style instance: D=2, n=3, m=2.
+
+    Node-type 1: cap (4, 8) cost $10; node-type 2: cap (2, 2) cost $6.
+    Tasks: t1 dem (2, 3) span [0, 1]; t2 dem (2, 4) span [2, 3];
+           t3 dem (1, 2) span [0, 3].
+    A timeline-aware solution fits all three in ONE type-1 node ($10: t1
+    and t2 never overlap); a timeline-agnostic packing needs at least $16
+    (t1+t2 flat in type 1, t3 in type 2) — the paper's Fig. 1 phenomenon.
+    """
+    nt = NodeTypes(cap=np.array([[4.0, 8.0], [2.0, 2.0]]),
+                   cost=np.array([10.0, 6.0]))
+    return Problem(
+        dem=np.array([[2.0, 3.0], [2.0, 4.0], [1.0, 2.0]]),
+        start=np.array([0, 2, 0]),
+        end=np.array([1, 3, 3]),
+        node_types=nt,
+        T=4,
+    )
+
+
+class TestProblem:
+    def test_fig1_instance_valid(self):
+        p = small_problem()
+        assert p.n == 3 and p.m == 2 and p.D == 2
+
+    def test_active_mask(self):
+        p = small_problem()
+        act = active_mask(p)
+        assert act.shape == (3, 4)
+        np.testing.assert_array_equal(act[0], [True, True, False, False])
+        np.testing.assert_array_equal(act[2], [True, True, True, True])
+
+    def test_trim_preserves_overlap_structure(self):
+        p = small_problem()
+        t, kept = trim_timeline(p)
+        assert t.T == 2  # starts are {0, 2}
+        # overlap pairs must be preserved by trimming
+        a_full = active_mask(p)
+        a_trim = active_mask(t)
+        ov_full = (a_full @ a_full.T) > 0
+        ov_trim = (a_trim @ a_trim.T) > 0
+        np.testing.assert_array_equal(ov_full, ov_trim)
+
+    def test_trim_idempotent(self):
+        p = small_problem()
+        t1, _ = trim_timeline(p)
+        t2, _ = trim_timeline(t1)
+        assert t1.T == t2.T
+        np.testing.assert_array_equal(t1.start, t2.start)
+        np.testing.assert_array_equal(t1.end, t2.end)
+
+    def test_validation(self):
+        nt = NodeTypes(cap=np.ones((1, 2)), cost=np.ones(1))
+        with pytest.raises(ValueError):
+            Problem(dem=np.ones((1, 2)), start=np.array([3]),
+                    end=np.array([1]), node_types=nt, T=4)
+        with pytest.raises(ValueError):
+            NodeTypes(cap=np.zeros((1, 2)), cost=np.ones(1))
+
+    def test_feasible_types_masks_oversize(self):
+        nt = NodeTypes(cap=np.array([[1.0, 1.0], [0.1, 1.0]]),
+                       cost=np.array([2.0, 1.1]))
+        p = Problem(dem=np.array([[0.5, 0.5]]), start=np.array([0]),
+                    end=np.array([0]), node_types=nt, T=1)
+        ft = feasible_types(p)
+        np.testing.assert_array_equal(ft, [[True, False]])
+        # penalty mapping must avoid the infeasible (cheaper-looking) type
+        assert penalty_map(p, "avg")[0] == 0
+
+    def test_infeasible_instance_raises(self):
+        nt = NodeTypes(cap=np.array([[0.1, 0.1]]), cost=np.array([1.0]))
+        p = Problem(dem=np.array([[0.5, 0.5]]), start=np.array([0]),
+                    end=np.array([0]), node_types=nt, T=1)
+        with pytest.raises(ValueError, match="infeasible"):
+            feasible_types(p)
+
+
+class TestPenalty:
+    def test_relative_demand_formulas(self):
+        p = small_problem()
+        h_avg = relative_demand(p, "avg")
+        h_max = relative_demand(p, "max")
+        # task 0 on type 0: (2/4 + 3/8)/2 = 0.4375 ; max = 0.5
+        assert h_avg[0, 0] == pytest.approx(0.4375)
+        assert h_max[0, 0] == pytest.approx(0.5)
+
+    def test_penalty_cost_weighting(self):
+        p = small_problem()
+        pen = penalty_matrix(p, "avg")
+        np.testing.assert_allclose(
+            pen, relative_demand(p, "avg") * p.node_types.cost[None, :]
+        )
+
+
+class TestPlacement:
+    def test_fig1_packs_single_node(self):
+        """The paper's Figure 1(a): time-sharing fits everything in one
+        type-1 node for $10."""
+        p = small_problem()
+        sol = rightsize(p, "penalty-map")
+        assert sol.cost(p) == pytest.approx(10.0)
+        assert sol.num_nodes == 1
+
+    def test_no_timeline_needs_more(self):
+        """Figure 1(b): with all tasks perpetually active, $10 no longer
+        suffices."""
+        p = small_problem()
+        flat = Problem(dem=p.dem, start=np.zeros(3, np.int64),
+                       end=np.zeros(3, np.int64), node_types=p.node_types,
+                       T=1)
+        sol = rightsize(flat, "penalty-map")
+        assert sol.cost(flat) >= 16.0 - 1e-9
+
+    def test_first_fit_prefers_earliest(self):
+        nt = NodeTypes(cap=np.array([[1.0]]), cost=np.array([1.0]))
+        # two nodes forced open by parallel tasks; third task fits both ->
+        # must go to node 0
+        p = Problem(dem=np.array([[0.6], [0.6], [0.3]]),
+                    start=np.array([0, 0, 1]), end=np.array([0, 0, 1]),
+                    node_types=nt, T=2)
+        sol = two_phase(p, np.zeros(3, np.int64), fit="first")
+        assert sol.num_nodes == 2
+        assert sol.assign[2] == sol.assign[0] == 0
+
+    def test_similarity_fit_picks_best_match(self):
+        nt = NodeTypes(cap=np.array([[1.0, 1.0]]), cost=np.array([1.0]))
+        # t0 (0.6,0.1) and t1 (0.5,0.6) cannot share a node (cpu 1.1 > 1),
+        # so two nodes open with remainders (0.4,0.9) and (0.5,0.4).  The
+        # cpu-heavy t2 (0.35,0.05) fits both; first-fit takes node 0,
+        # cosine similarity prefers the cpu-heavy remainder of node 1.
+        p = Problem(
+            dem=np.array([[0.6, 0.1], [0.5, 0.6], [0.35, 0.05]]),
+            start=np.array([0, 0, 0]),
+            end=np.array([1, 1, 1]),
+            node_types=nt, T=2,
+        )
+        solF = two_phase(p, np.zeros(3, np.int64), fit="first")
+        solS = two_phase(p, np.zeros(3, np.int64), fit="similarity")
+        assert solF.assign[2] == 0          # first-fit: earliest feasible
+        assert solS.assign[2] == 1          # similarity: ratio match
+        verify(p, solF), verify(p, solS)
+
+    def test_all_tasks_placed_and_feasible(self):
+        p = synthetic_instance(SyntheticSpec(n=150, m=6, D=4, seed=3))
+        t, _ = trim_timeline(p)
+        for fit in ("first", "similarity"):
+            for filling in (False, True):
+                sol = two_phase(t, penalty_map(t), fit=fit, filling=filling)
+                verify(t, sol)
+
+
+class TestLP:
+    def test_lp_lower_bounds_solutions(self):
+        p = synthetic_instance(SyntheticSpec(n=100, m=4, D=3, seed=5))
+        t, _ = trim_timeline(p)
+        lb = lp_lowerbound(t)
+        for algo in ("penalty-map", "lp-map", "lp-map-f", "penalty-map-f"):
+            sol = rightsize(t, algo)
+            assert sol.cost(t) >= lb - 1e-6, algo
+
+    def test_lp_mapping_sums_to_one(self):
+        p = synthetic_instance(SyntheticSpec(n=60, m=4, D=2, seed=6))
+        res = solve_lp(p)
+        np.testing.assert_allclose(res.x.sum(axis=1), 1.0, atol=1e-6)
+        assert (res.x >= -1e-9).all()
+
+    def test_lp_alpha_matches_max_congestion(self):
+        """alpha_B must equal the max fractional congestion of type B."""
+        p = synthetic_instance(SyntheticSpec(n=60, m=3, D=2, seed=8))
+        t, _ = trim_timeline(p)
+        res = solve_lp(t)
+        act = active_mask(t)  # (n, T')
+        for B in range(t.m):
+            w = t.dem / t.node_types.cap[B][None, :]  # (n, D)
+            cong = np.einsum("nt,nd->td", act * res.x[:, B : B + 1], w)
+            assert cong.max() <= res.alpha[B] + 1e-6
+
+    def test_congestion_lb_below_lp_lb(self):
+        p = synthetic_instance(SyntheticSpec(n=80, m=5, D=3, seed=9))
+        t, _ = trim_timeline(p)
+        assert congestion_lowerbound(t) <= lp_lowerbound(t) + 1e-6
+
+    def test_lp_subsampled_is_relaxation(self):
+        g = gct_like_instance(n=200, m=6, seed=4)
+        t, _ = trim_timeline(g)
+        full = solve_lp(t).objective
+        sub = solve_lp(t, max_slots=50).objective
+        assert sub <= full + 1e-6
+
+
+class TestFilling:
+    def test_filling_never_hurts(self):
+        """Cross-fill only reuses already-purchased capacity: cost must be
+        <= the unfilled variant on every seed."""
+        for seed in range(4):
+            p = synthetic_instance(SyntheticSpec(n=120, m=5, D=3, seed=seed))
+            t, _ = trim_timeline(p)
+            mp = penalty_map(t)
+            base = two_phase(t, mp, fit="first", filling=False).cost(t)
+            filled = two_phase(t, mp, fit="first", filling=True).cost(t)
+            assert filled <= base + 1e-9
+
+    def test_paper_protocol_ordering(self):
+        """Paper §VI headline: LP-map-F is the best algorithm on synthetic
+        instances (Fig. 7)."""
+        p = synthetic_instance(SyntheticSpec(n=300, m=8, D=5, seed=11))
+        res = evaluate(p)
+        assert res["normalized"]["lp-map-f"] <= res["normalized"]["penalty-map"] + 1e-9
+        assert res["normalized"]["lp-map-f"] <= 1.35  # paper: within ~20%
+
+
+class TestNoTimeline:
+    def test_no_timeline_lb_dominates(self):
+        """§VI-F: treating tasks as always-active can only raise the bound."""
+        p = synthetic_instance(SyntheticSpec(n=100, m=5, D=3, seed=12))
+        t, _ = trim_timeline(p)
+        assert no_timeline_lowerbound(t) >= lp_lowerbound(t) - 1e-6
+
+
+class TestVerify:
+    def test_verify_catches_violation(self):
+        p = small_problem()
+        bad = Solution(node_type=np.array([1]), assign=np.zeros(3, np.int64))
+        with pytest.raises(AssertionError):
+            verify(p, bad)

@@ -1,0 +1,80 @@
+"""Fleet-planning integration (paper x framework) + partitioning units."""
+
+import numpy as np
+import pytest
+
+from repro.core import rightsize, trim_timeline, verify
+from repro.workload import DEFAULT_SCHEDULE, TPU_SKUS, fleet_problem
+
+
+class TestFleetPlanning:
+    def test_problem_builds_and_solves(self, tmp_path):
+        # no dry-run artifacts -> builtin demand table
+        problem, tasks = fleet_problem(DEFAULT_SCHEDULE,
+                                       dryrun_dir=str(tmp_path))
+        assert problem.n >= len(DEFAULT_SCHEDULE)
+        assert problem.m == TPU_SKUS.m
+        sol = rightsize(problem, "lp-map-f")
+        t, _ = trim_timeline(problem)
+        verify(t, sol)
+        assert sol.cost(t) > 0
+
+    def test_measured_demands_used_when_present(self):
+        import glob
+        import os
+
+        if not glob.glob("results/dryrun*/*__16x16.json"):
+            pytest.skip("no dry-run artifacts")
+        d = sorted(glob.glob("results/dryrun*"))[0]
+        problem, tasks = fleet_problem(DEFAULT_SCHEDULE, dryrun_dir=d)
+        assert any(t["source"] == "dryrun" for t in tasks)
+
+    def test_volume_discount_ordering(self):
+        # bigger slices cheaper per chip (e = 0.92)
+        per_chip = TPU_SKUS.cost / TPU_SKUS.cap[:, 0]
+        assert (np.diff(per_chip) < 0).all()
+
+
+class TestPartitioning:
+    def test_param_specs_cover_all_leaves(self):
+        import jax
+        from jax.sharding import Mesh
+
+        from repro.configs import smoke_config
+        from repro.models import init_params
+        from repro.sharding import param_specs
+
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        for arch in ("gemma2-9b", "olmoe-1b-7b", "recurrentgemma-9b",
+                     "rwkv6-7b", "whisper-small"):
+            cfg = smoke_config(arch)
+            params = init_params(jax.random.PRNGKey(0), cfg)
+            specs = param_specs(params, cfg, mesh)
+            p_leaves = jax.tree.leaves(params)
+            s_leaves = jax.tree.leaves(
+                specs, is_leaf=lambda x: hasattr(x, "_normalized_spec")
+                or x.__class__.__name__ == "PartitionSpec")
+            assert len(p_leaves) == len(s_leaves), arch
+            for p, s in zip(p_leaves, s_leaves):
+                assert len(s) <= p.ndim, (arch, p.shape, s)
+
+    def test_constrain_noop_without_mesh(self):
+        import jax.numpy as jnp
+
+        from repro.sharding.ctx import constrain, hints_enabled
+
+        assert not hints_enabled()
+        x = jnp.ones((4, 8))
+        y = constrain(x, "batch", "model")
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_constrain_axis_count_checked(self):
+        import jax.numpy as jnp
+
+        from repro.sharding.ctx import constrain, use_mesh
+        from repro.launch.mesh import make_host_mesh
+
+        with use_mesh(make_host_mesh()):
+            with pytest.raises(ValueError):
+                constrain(jnp.ones((4, 8)), "batch")

@@ -1,0 +1,99 @@
+"""Hypothesis property-based tests on the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    NodeTypes,
+    Problem,
+    active_mask,
+    congestion_lowerbound,
+    lp_lowerbound,
+    penalty_map,
+    rightsize,
+    trim_timeline,
+    two_phase,
+    verify,
+)
+
+
+@st.composite
+def problems(draw, max_n=40, max_m=4, max_d=3, max_t=20):
+    n = draw(st.integers(1, max_n))
+    m = draw(st.integers(1, max_m))
+    D = draw(st.integers(1, max_d))
+    T = draw(st.integers(1, max_t))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    cap = rng.uniform(0.3, 1.0, size=(m, D))
+    cost = rng.uniform(0.2, 2.0, size=m)
+    # demands bounded by the *min* capacity so every task fits every type
+    dem = rng.uniform(0.0, cap.min(axis=0) * 0.9, size=(n, D))
+    a = rng.integers(0, T, n)
+    b = rng.integers(0, T, n)
+    return Problem(
+        dem=dem, start=np.minimum(a, b), end=np.maximum(a, b),
+        node_types=NodeTypes(cap=cap, cost=cost), T=T,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(problems())
+def test_every_algorithm_produces_feasible_solutions(p):
+    """THE invariant: no capacity violated at any (node, slot, dim), every
+    task placed — across all four algorithms on arbitrary instances."""
+    t, _ = trim_timeline(p)
+    for algo in ("penalty-map", "penalty-map-f", "lp-map", "lp-map-f"):
+        sol = rightsize(t, algo, check=False)
+        verify(t, sol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(problems())
+def test_lowerbounds_sandwich(p):
+    """congestion LB <= LP LB <= any algorithm's cost."""
+    t, _ = trim_timeline(p)
+    clb = congestion_lowerbound(t)
+    llb = lp_lowerbound(t)
+    assert clb <= llb + 1e-6
+    cost = rightsize(t, "lp-map-f").cost(t)
+    assert llb <= cost + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(problems())
+def test_trimming_preserves_costs(p):
+    """Solving on the trimmed timeline gives a solution whose un-trimmed
+    expansion is feasible: trimming does not change the feasible set."""
+    t, kept = trim_timeline(p)
+    mp = penalty_map(t)
+    sol = two_phase(t, mp, fit="first")
+    verify(t, sol)
+    # expand assignment back to the original timeline and re-verify there
+    verify_full = np.zeros((sol.num_nodes, p.T, p.D))
+    for u in range(p.n):
+        verify_full[sol.assign[u], p.start[u]: p.end[u] + 1] += p.dem[u]
+    cap = p.node_types.cap[sol.node_type]
+    assert (verify_full <= cap[:, None, :] + 1e-7).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(problems())
+def test_filling_never_increases_cost(p):
+    t, _ = trim_timeline(p)
+    mp = penalty_map(t)
+    plain = two_phase(t, mp, fit="first", filling=False).cost(t)
+    filled = two_phase(t, mp, fit="first", filling=True).cost(t)
+    assert filled <= plain + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(problems(max_n=25))
+def test_congestion_kernel_matches_mask_matmul(p):
+    from repro.kernels import ops
+
+    t, _ = trim_timeline(p)
+    w = (t.dem / t.node_types.cap[0][None, :]).astype(np.float32)
+    out = np.asarray(ops.congestion(t.start, t.end, w, t.T))
+    act = active_mask(t).astype(np.float32)  # (n, T')
+    want = act.T @ w
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)

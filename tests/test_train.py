@@ -1,0 +1,162 @@
+"""Training substrate tests: optimizer, microbatching, compression,
+checkpoint/restart determinism, fault injection, elastic restore."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import init_params
+from repro.train import (
+    AdamWConfig,
+    DataConfig,
+    TrainConfig,
+    checkpoint,
+    compression,
+    init_train_state,
+    make_batch,
+    make_train_step,
+)
+from repro.train.fault import FaultInjector, LoopConfig, run_with_restarts, \
+    train_loop
+
+KEY = jax.random.PRNGKey(0)
+
+
+def setup_tiny(microbatch=1, compress=False):
+    cfg = smoke_config("qwen2.5-3b")
+    tc = TrainConfig(
+        optimizer=AdamWConfig(lr=1e-3, warmup_steps=5),
+        remat=True, microbatch=microbatch, loss_chunk=64,
+        compress_grads=compress)
+    params = init_params(KEY, cfg)
+    state = init_train_state(params, tc)
+    step = jax.jit(make_train_step(cfg, tc))
+    dc = DataConfig(batch=4, seq_len=32)
+    return cfg, tc, params, state, step, dc
+
+
+class TestTrainStep:
+    def test_loss_decreases(self):
+        cfg, tc, params, state, step, dc = setup_tiny()
+        losses = []
+        for i in range(30):
+            params, state, m = step(params, state, make_batch(cfg, dc, i))
+            losses.append(float(m["loss"]))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+
+    def test_microbatch_matches_full_batch_grads(self):
+        """Gradient accumulation must reproduce the full-batch update."""
+        cfg, tc1, params, state1, step1, dc = setup_tiny(microbatch=1)
+        tc4 = TrainConfig(optimizer=tc1.optimizer, remat=True, microbatch=4,
+                          loss_chunk=64)
+        step4 = jax.jit(make_train_step(cfg, tc4))
+        state4 = init_train_state(params, tc4)
+        batch = make_batch(cfg, dc, 0)
+        p1, _s, m1 = step1(params, state1, batch)
+        p4, _s, m4 = step4(params, state4, batch)
+        diff = jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p4)
+        worst = max(jax.tree.leaves(diff))
+        assert worst < 5e-5, worst
+
+    def test_compression_roundtrip_error_feedback(self):
+        g = jax.random.normal(KEY, (1000,)) * 0.01
+        err = jnp.zeros((1000,))
+        # single round trip loses precision...
+        g1, err1 = compression.compress_decompress(g, err)
+        assert float(jnp.max(jnp.abs(g1 - g))) > 0
+        # ...but accumulated updates converge: sum of g_hat ~ sum of g
+        total_hat = jnp.zeros_like(g)
+        e = jnp.zeros_like(g)
+        for _ in range(50):
+            gh, e = compression.compress_decompress(g, e)
+            total_hat += gh
+        rel = float(jnp.linalg.norm(total_hat - 50 * g)
+                    / jnp.linalg.norm(50 * g))
+        assert rel < 1e-2, rel
+
+    def test_compressed_training_still_learns(self):
+        cfg, tc, params, state, step, dc = setup_tiny(compress=True)
+        losses = []
+        for i in range(30):
+            params, state, m = step(params, state, make_batch(cfg, dc, i))
+            losses.append(float(m["loss"]))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        cfg, tc, params, state, step, dc = setup_tiny()
+        checkpoint.save(str(tmp_path), (params, state), step=7)
+        (p2, s2), got = checkpoint.restore(str(tmp_path), (params, state))
+        assert got == 7
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_keep_k_gc(self, tmp_path):
+        cfg, tc, params, state, step, dc = setup_tiny()
+        ck = checkpoint.Checkpointer(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save_async(params, s)
+        ck.close()
+        steps = sorted(int(f.split("_")[1].split(".")[0])
+                       for f in os.listdir(tmp_path))
+        assert steps == [3, 4]
+
+    def test_elastic_restore_with_new_sharding(self, tmp_path):
+        """Restore onto a different (logical) mesh: the elastic path."""
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+        cfg, tc, params, state, step, dc = setup_tiny()
+        checkpoint.save(str(tmp_path), params, step=1)
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        shardings = jax.tree.map(
+            lambda p: NamedSharding(mesh, P()), params)
+        p2, _ = checkpoint.restore(str(tmp_path), params,
+                                   shardings=shardings)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestFaultTolerance:
+    def test_restart_resumes_exact_trajectory(self, tmp_path):
+        """Crash mid-run; supervised restarts must converge to the exact
+        same final params as an uninterrupted run."""
+        def make_args():
+            cfg, tc, params, state, step, dc = setup_tiny()
+            return step, params, state, (
+                lambda s: make_batch(cfg, dc, s))
+
+        lc_a = LoopConfig(total_steps=20, ckpt_dir=str(tmp_path / "a"),
+                          ckpt_every=5)
+        p_clean, _s, hist_clean = run_with_restarts(
+            make_args, lc_a, FaultInjector(()))
+
+        lc_b = LoopConfig(total_steps=20, ckpt_dir=str(tmp_path / "b"),
+                          ckpt_every=5)
+        p_crashy, _s, hist = run_with_restarts(
+            make_args, lc_b, FaultInjector((7, 13)))
+        for a, b in zip(jax.tree.leaves(p_clean), jax.tree.leaves(p_crashy)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+
+    def test_straggler_detection(self, tmp_path):
+        import time as time_mod
+
+        cfg, tc, params, state, step, dc = setup_tiny()
+        slow = {17}
+
+        def batch_at(s):
+            if s in slow:
+                time_mod.sleep(1.0)
+            return make_batch(cfg, dc, s)
+
+        lc = LoopConfig(total_steps=20, ckpt_dir=str(tmp_path),
+                        ckpt_every=50, straggler_factor=3.0)
+        _p, _s, hist = train_loop(step, params, state, batch_at, lc)
+        assert hist["straggler"][17], hist["straggler"]
