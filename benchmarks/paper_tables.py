@@ -4,6 +4,10 @@ Every function returns a list of row dicts; ``run.py`` prints them as CSV
 and writes JSON under results/paper/.  The ``scale`` knob trades fidelity
 for wall time: 'paper' replicates the paper's sizes (n=1000, 5 seeds);
 'quick' shrinks n and seeds for CI.
+
+Each sweep table issues ONE batched LP solve for its whole instance grid
+(``lp='pdhg'``, the fleet-sweep engine in ``repro.core.batch``); pass
+``lp='highs'`` for the paper's original per-instance exact-LP loop.
 """
 
 from __future__ import annotations
@@ -12,10 +16,10 @@ import time
 
 import numpy as np
 
-from repro.core import evaluate, solve_lp, trim_timeline, rightsize, \
-    no_timeline_lowerbound
+from repro.core import evaluate_many, solve_lp, trim_timeline, \
+    rightsize, no_timeline_lowerbound
 from repro.workload import SyntheticSpec, gct_like_instance, \
-    synthetic_instance
+    sweep_specs, synthetic_batch, synthetic_instance
 
 ALGOS = ("penalty-map", "penalty-map-f", "lp-map", "lp-map-f")
 
@@ -23,158 +27,165 @@ ALGOS = ("penalty-map", "penalty-map-f", "lp-map", "lp-map-f")
 def _scale_params(scale: str):
     if scale == "quick":
         return {"n": 200, "n_sweep": (100, 200, 400), "seeds": 2,
-                "m": 6, "gct_n": 300, "max_slots": 200}
+                "m": 6, "gct_n": 300, "max_slots": 200, "lp_iters": 1000}
     if scale == "default":
         # paper-shaped but sized for a single CPU core (~20 min total)
         return {"n": 500, "n_sweep": (500, 1000), "seeds": 2,
-                "m": 10, "gct_n": 500, "max_slots": 300}
+                "m": 10, "gct_n": 500, "max_slots": 300, "lp_iters": 1500}
     return {"n": 1000, "n_sweep": (500, 1000, 1500, 2000), "seeds": 5,
-            "m": 10, "gct_n": 1000, "max_slots": 400}
+            "m": 10, "gct_n": 1000, "max_slots": 400, "lp_iters": 2000}
 
 
-def _avg_eval(mk_problem, seeds: int, max_slots=None) -> dict:
-    sums = {a: 0.0 for a in ALGOS}
-    lb = 0.0
-    wall = {a: 0.0 for a in ALGOS}
-    for s in range(seeds):
-        p = mk_problem(s)
-        t, _ = trim_timeline(p)
-        from repro.core.lp_map import solve_lp as _slp
-        lp_result = _slp(t, max_slots=max_slots)
-        for a in ALGOS:
-            sol = rightsize(t, a, lp_result=lp_result)
-            sums[a] += sol.cost(t) / max(lp_result.objective, 1e-9)
-            wall[a] += sol.meta["wall_s"]
-        lb += lp_result.objective
-    out = {a: sums[a] / seeds for a in ALGOS}
-    out["lb"] = lb / seeds
-    out["wall_s"] = {a: wall[a] / seeds for a in ALGOS}
-    return out
+def _highs_entry(p, max_slots):
+    """Per-instance exact-LP protocol entry (the paper's original loop),
+    with the Lemma-sound ``max_slots`` constraint subsampling at GCT
+    scale."""
+    from repro.core.lp_map import solve_lp as _slp
+
+    t, _ = trim_timeline(p)
+    lp_result = _slp(t, max_slots=max_slots)
+    lb = lp_result.objective
+    entry = {"lb": lb, "costs": {}, "normalized": {}, "wall_s": {}}
+    for a in ALGOS:
+        sol = rightsize(t, a, lp_result=lp_result)
+        cost = sol.cost(t)
+        entry["costs"][a] = cost
+        entry["normalized"][a] = cost / max(lb, 1e-9)
+        entry["wall_s"][a] = sol.meta["wall_s"]
+    return entry
+
+
+def _sweep_eval(groups, sp, lp="pdhg", max_slots=None):
+    """Run the §VI protocol over a whole sweep grid.
+
+    ``groups[g]`` holds one sweep point's seed-replicated instances.  With
+    ``lp='pdhg'`` the entire flattened grid goes through ONE batched LP
+    solve (``evaluate_many``); ``lp='highs'`` reproduces the per-instance
+    exact-LP loop (``max_slots`` caps its constraint rows at GCT scale).
+    Returns one seed-averaged dict per group with the normalized cost per
+    algorithm, 'lb', and per-algo 'wall_s'.
+    """
+    flat = [p for g in groups for p in g]
+    if lp == "pdhg":
+        entries = evaluate_many(flat, algos=ALGOS, lp_iters=sp["lp_iters"])
+    else:
+        entries = [_highs_entry(p, max_slots) for p in flat]
+    rows, i = [], 0
+    for g in groups:
+        part = entries[i : i + len(g)]
+        i += len(g)
+        row = {a: float(np.mean([e["normalized"][a] for e in part]))
+               for a in ALGOS}
+        row["lb"] = float(np.mean([e["lb"] for e in part]))
+        row["wall_s"] = {a: float(np.mean([e["wall_s"][a] for e in part]))
+                         for a in ALGOS}
+        rows.append(row)
+    return rows
+
+
+def _spec_table(figure, axis_name, axis_vals, base, sp, lp,
+                spec_axis=None):
+    """Sweep one SyntheticSpec axis: one batched LP for the whole table."""
+    specs = sweep_specs(base, seeds=sp["seeds"],
+                        **{spec_axis or axis_name: axis_vals})
+    problems = synthetic_batch(specs)
+    k = sp["seeds"]
+    groups = [problems[i * k : (i + 1) * k] for i in range(len(axis_vals))]
+    res = _sweep_eval(groups, sp, lp=lp)
+    return [{"figure": figure, axis_name: v,
+             **{a: round(r[a], 4) for a in ALGOS}}
+            for v, r in zip(axis_vals, res)]
+
+
+def _gct_table(figure, axis_name, axis_vals, mk, sp, lp):
+    """Sweep a GCT-emulation axis: one batched LP for the whole table."""
+    groups = [[mk(v, s) for s in range(sp["seeds"])] for v in axis_vals]
+    res = _sweep_eval(groups, sp, lp=lp, max_slots=sp["max_slots"])
+    return [{"figure": figure, axis_name: v,
+             **{a: round(r[a], 4) for a in ALGOS}}
+            for v, r in zip(axis_vals, res)]
 
 
 # ---------------------------------------------------------------- Fig 7a
-def fig7a(scale="paper"):
+def fig7a(scale="paper", lp="pdhg"):
     sp = _scale_params(scale)
-    rows = []
-    for D in (2, 5, 7):
-        res = _avg_eval(
-            lambda s, D=D: synthetic_instance(SyntheticSpec(
-                n=sp["n"], m=sp["m"], D=D, seed=s)),
-            sp["seeds"])
-        rows.append({"figure": "7a", "D": D,
-                     **{a: round(res[a], 4) for a in ALGOS}})
-    return rows
+    return _spec_table("7a", "D", (2, 5, 7),
+                       SyntheticSpec(n=sp["n"], m=sp["m"]), sp, lp)
 
 
 # ---------------------------------------------------------------- Fig 7b
-def fig7b(scale="paper"):
+def fig7b(scale="paper", lp="pdhg"):
     sp = _scale_params(scale)
-    rows = []
-    for m in (5, 10, 15):
-        res = _avg_eval(
-            lambda s, m=m: synthetic_instance(SyntheticSpec(
-                n=sp["n"], m=m, D=5, seed=s)),
-            sp["seeds"])
-        rows.append({"figure": "7b", "m": m,
-                     **{a: round(res[a], 4) for a in ALGOS}})
-    return rows
+    return _spec_table("7b", "m", (5, 10, 15),
+                       SyntheticSpec(n=sp["n"], D=5), sp, lp)
 
 
 # ---------------------------------------------------------------- Fig 7c
-def fig7c(scale="paper"):
+def fig7c(scale="paper", lp="pdhg"):
     sp = _scale_params(scale)
-    rows = []
-    for hi in (0.05, 0.1, 0.2):
-        res = _avg_eval(
-            lambda s, hi=hi: synthetic_instance(SyntheticSpec(
-                n=sp["n"], m=sp["m"], D=5, demand=(0.01, hi), seed=s)),
-            sp["seeds"])
-        rows.append({"figure": "7c", "demand_hi": hi,
-                     **{a: round(res[a], 4) for a in ALGOS}})
+    rows = _spec_table("7c", "demand_hi", ((0.01, 0.05), (0.01, 0.1),
+                                           (0.01, 0.2)),
+                       SyntheticSpec(n=sp["n"], m=sp["m"], D=5), sp, lp,
+                       spec_axis="demand")
+    for row in rows:
+        row["demand_hi"] = row["demand_hi"][1]
     return rows
 
 
 # ---------------------------------------------------------------- Fig 8a
-def fig8a(scale="paper"):
+def fig8a(scale="paper", lp="pdhg"):
     sp = _scale_params(scale)
-    rows = []
-    for n in sp["n_sweep"]:
-        res = _avg_eval(
-            lambda s, n=n: gct_like_instance(n=n, m=sp["m"], seed=s),
-            sp["seeds"], max_slots=sp["max_slots"])
-        rows.append({"figure": "8a", "n": n,
-                     **{a: round(res[a], 4) for a in ALGOS}})
-    return rows
+    return _gct_table(
+        "8a", "n", sp["n_sweep"],
+        lambda n, s: gct_like_instance(n=n, m=sp["m"], seed=s), sp, lp)
 
 
 # ---------------------------------------------------------------- Fig 8b
-def fig8b(scale="paper"):
+def fig8b(scale="paper", lp="pdhg"):
     sp = _scale_params(scale)
-    rows = []
-    for m in (4, 7, 10, 13):
-        res = _avg_eval(
-            lambda s, m=m: gct_like_instance(n=sp["gct_n"], m=m, seed=s),
-            sp["seeds"], max_slots=sp["max_slots"])
-        rows.append({"figure": "8b", "m": m,
-                     **{a: round(res[a], 4) for a in ALGOS}})
-    return rows
+    return _gct_table(
+        "8b", "m", (4, 7, 10, 13),
+        lambda m, s: gct_like_instance(n=sp["gct_n"], m=m, seed=s), sp, lp)
 
 
 # ---------------------------------------------------------------- Fig 9
-def fig9(scale="paper"):
+def fig9(scale="paper", lp="pdhg"):
     sp = _scale_params(scale)
-    rows = []
-    for e in (0.33, 1.0, 2.0, 3.0):
-        res = _avg_eval(
-            lambda s, e=e: synthetic_instance(SyntheticSpec(
-                n=sp["n"], m=sp["m"], D=5, cost_model="heterogeneous",
-                e=e, seed=s)),
-            sp["seeds"])
-        rows.append({"figure": "9", "e": e,
-                     **{a: round(res[a], 4) for a in ALGOS}})
-    return rows
+    return _spec_table("9", "e", (0.33, 1.0, 2.0, 3.0),
+                       SyntheticSpec(n=sp["n"], m=sp["m"], D=5,
+                                     cost_model="heterogeneous"), sp, lp)
 
 
 # ---------------------------------------------------------------- Fig 10
-def fig10(scale="paper"):
+def fig10(scale="paper", lp="pdhg"):
     sp = _scale_params(scale)
-    rows = []
-    for m in (4, 7, 10, 13):
-        res = _avg_eval(
-            lambda s, m=m: gct_like_instance(
-                n=sp["gct_n"], m=m, seed=s, cost_model="gce"),
-            sp["seeds"], max_slots=sp["max_slots"])
-        rows.append({"figure": "10", "m": m,
-                     **{a: round(res[a], 4) for a in ALGOS}})
-    return rows
+    return _gct_table(
+        "10", "m", (4, 7, 10, 13),
+        lambda m, s: gct_like_instance(n=sp["gct_n"], m=m, seed=s,
+                                       cost_model="gce"), sp, lp)
 
 
 # ---------------------------------------------------------------- Fig 11
-def fig11(scale="paper"):
+def fig11(scale="paper", lp="pdhg"):
     """PenaltyMap-F vs LP-map-F across the GCT scenarios."""
     sp = _scale_params(scale)
-    rows = []
     scenarios = [("hom", dict(cost_model="homogeneous")),
                  ("gce", dict(cost_model="gce"))]
-    for tag, kw in scenarios:
-        for m in (4, 10, 13):
-            res = _avg_eval(
-                lambda s, m=m, kw=kw: gct_like_instance(
-                    n=sp["gct_n"], m=m, seed=s, **kw),
-                sp["seeds"], max_slots=sp["max_slots"])
-            rows.append({
-                "figure": "11", "scenario": f"{tag}-m{m}",
-                "penalty-map-f": round(res["penalty-map-f"], 4),
-                "lp-map-f": round(res["lp-map-f"], 4),
-                "gain_pct": round(100 * (res["penalty-map-f"]
-                                         - res["lp-map-f"])
-                                  / max(res["lp-map-f"], 1e-9), 2),
-            })
-    return rows
+    points = [(tag, m, kw) for tag, kw in scenarios for m in (4, 10, 13)]
+    groups = [[gct_like_instance(n=sp["gct_n"], m=m, seed=s, **kw)
+               for s in range(sp["seeds"])] for _, m, kw in points]
+    res = _sweep_eval(groups, sp, lp=lp, max_slots=sp["max_slots"])
+    return [{
+        "figure": "11", "scenario": f"{tag}-m{m}",
+        "penalty-map-f": round(r["penalty-map-f"], 4),
+        "lp-map-f": round(r["lp-map-f"], 4),
+        "gain_pct": round(100 * (r["penalty-map-f"] - r["lp-map-f"])
+                          / max(r["lp-map-f"], 1e-9), 2),
+    } for (tag, m, _), r in zip(points, res)]
 
 
 # ------------------------------------------------------------ §VI-E time
-def runtime(scale="paper"):
+def runtime(scale="paper", lp="pdhg"):
     """Paper: PenaltyMap ~1s; LP solve ~15min (CBC) at n=2000, m=13;
     mapping+placement ~1s.  We report HiGHS numbers."""
     n = {"paper": 2000, "default": 1000}.get(scale, 400)
@@ -198,7 +209,7 @@ def runtime(scale="paper"):
 
 
 # ------------------------------------------------------------ §VI-F
-def no_timeline(scale="paper"):
+def no_timeline(scale="paper", lp="pdhg"):
     """Timeline-aware LP-map-F cost vs the timeline-agnostic lower bound:
     the paper reports ~2x average."""
     sp = _scale_params(scale)
@@ -216,7 +227,7 @@ def no_timeline(scale="paper"):
 
 
 # ------------------------------------------------------------ Fig 5
-def near_integrality(scale="paper"):
+def near_integrality(scale="paper", lp="pdhg"):
     sp = _scale_params(scale)
     p = synthetic_instance(SyntheticSpec(n=500 if scale == "paper" else 150,
                                          m=10, D=5, seed=0))
@@ -231,7 +242,7 @@ def near_integrality(scale="paper"):
 
 
 # ---------------------------------------------------- beyond-paper tables
-def scaling_beyond(scale="default"):
+def scaling_beyond(scale="default", lp="pdhg"):
     """HiGHS (exact) vs JAX PDHG (matrix-free, O(n+T)/iter) as n grows —
     the accelerator-native solve path's quality/latency trade."""
     from repro.core import solve_lp_pdhg
@@ -260,7 +271,7 @@ def scaling_beyond(scale="default"):
     return rows
 
 
-def local_search_beyond(scale="default"):
+def local_search_beyond(scale="default", lp="pdhg"):
     """Node-elimination post-pass on LP-map-F (the consistent beyond-paper
     cost reduction)."""
     sp = _scale_params(scale)
@@ -284,6 +295,43 @@ def local_search_beyond(scale="default"):
     return rows
 
 
+def fleet_sweep(scale="default", lp="pdhg"):
+    """The batched engine's headline: LP phase of a ragged Table-I-style
+    sweep grid, one fused padded solve vs the per-instance loop (which
+    pays a fresh JIT compile per distinct instance shape)."""
+    import jax
+
+    from repro.core import solve_lp_pdhg, solve_lp_many
+
+    sp = _scale_params(scale)
+    shapes = {"quick": 8, "default": 12, "paper": 16}.get(scale, 12)
+    seeds = max(sp["seeds"], 2)
+    base_n = {"quick": 50, "default": 100, "paper": 200}.get(scale, 100)
+    specs = [SyntheticSpec(n=base_n + 25 * i, m=sp["m"], D=5,
+                           T=12 + 2 * i, seed=s)
+             for i in range(shapes) for s in range(seeds)]
+    problems = [trim_timeline(p)[0] for p in synthetic_batch(specs)]
+    iters = sp["lp_iters"]
+
+    jax.clear_caches()
+    t0 = time.perf_counter()
+    batched = solve_lp_many(problems, iters=iters)
+    t_batch = time.perf_counter() - t0
+    jax.clear_caches()
+    t0 = time.perf_counter()
+    looped = [solve_lp_pdhg(p, iters=iters) for p in problems]
+    t_loop = time.perf_counter() - t0
+    agree = all(np.array_equal(a.mapping, b.mapping)
+                for a, b in zip(batched, looped))
+    return [{
+        "figure": "fleet_sweep(beyond)", "B": len(problems),
+        "distinct_shapes": shapes,
+        "batched_s": round(t_batch, 2), "looped_s": round(t_loop, 2),
+        "speedup": round(t_loop / max(t_batch, 1e-9), 1),
+        "mappings_identical": agree,
+    }]
+
+
 ALL_TABLES = {
     "fig7a": fig7a, "fig7b": fig7b, "fig7c": fig7c,
     "fig8a": fig8a, "fig8b": fig8b, "fig9": fig9, "fig10": fig10,
@@ -291,4 +339,5 @@ ALL_TABLES = {
     "near_integrality": near_integrality,
     "scaling_beyond": scaling_beyond,
     "local_search_beyond": local_search_beyond,
+    "fleet_sweep": fleet_sweep,
 }

@@ -1,10 +1,13 @@
 """Benchmark driver: one function per paper table/figure.
 
     python -m benchmarks.run [--scale quick|paper] [--only fig8a,...]
-                             [--out results/paper]
+                             [--lp pdhg|highs] [--out results/paper]
 
-Prints ``table,key=value,...`` CSV rows; writes JSON per table.  Roofline
-rows (from dry-run artifacts, if present) are appended at the end.
+Prints ``table,key=value,...`` CSV rows; writes JSON per table.  With the
+default ``--lp pdhg`` every sweep table funnels its whole instance grid
+through ONE batched LP solve (repro.core.batch); ``--lp highs`` restores
+the paper's per-instance exact-LP loop.  Roofline rows (from dry-run
+artifacts, if present) are appended at the end.
 """
 
 from __future__ import annotations
@@ -21,6 +24,9 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", choices=["quick", "default", "paper"],
                     default="default")
+    ap.add_argument("--lp", choices=["pdhg", "highs"], default="pdhg",
+                    help="LP backend: batched PDHG sweep engine (one "
+                         "solve per table) or per-instance exact HiGHS")
     ap.add_argument("--only", default="")
     ap.add_argument("--out", default="results/paper")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
@@ -28,11 +34,16 @@ def main(argv=None) -> None:
 
     os.makedirs(args.out, exist_ok=True)
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - set(ALL_TABLES)
+        if unknown:
+            ap.error(f"unknown table(s) {sorted(unknown)}; "
+                     f"choose from {sorted(ALL_TABLES)}")
     for name, fn in ALL_TABLES.items():
         if only and name not in only:
             continue
         t0 = time.perf_counter()
-        rows = fn(scale=args.scale)
+        rows = fn(scale=args.scale, lp=args.lp)
         dt = time.perf_counter() - t0
         with open(os.path.join(args.out, f"{name}.json"), "w") as f:
             json.dump(rows, f, indent=1)

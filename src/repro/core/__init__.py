@@ -2,7 +2,8 @@
 
 Public API:
     Problem, NodeTypes, Solution        — data model
-    rightsize, evaluate                 — solve / paper-protocol evaluation
+    rightsize, evaluate, evaluate_many  — solve / paper-protocol evaluation
+    solve_lp_many, pack_problems        — batched fleet-sweep LP engine
     penalty_map, lp_map, solve_lp       — mapping strategies
     two_phase                           — placement engine
     lp_lowerbound, congestion_lowerbound, no_timeline_lowerbound
@@ -29,10 +30,11 @@ from .lowerbound import (
     congestion_lowerbound,
     no_timeline_lowerbound,
 )
-from .api import rightsize, evaluate, ALGORITHMS
+from .api import rightsize, evaluate, evaluate_many, ALGORITHMS
 from .local_search import eliminate_nodes
 from .rounding import concentration_rounding
 from .lp_pdhg import solve_lp_pdhg, PDHGResult
+from .batch import ProblemBatch, pack_problems, solve_lp_many
 
 __all__ = [
     "Problem", "NodeTypes", "Solution", "trim_timeline", "active_mask",
@@ -41,7 +43,7 @@ __all__ = [
     "min_penalty", "two_phase", "TypePool", "FIT_POLICIES",
     "solve_lp", "lp_map", "LPResult",
     "lp_lowerbound", "congestion_lowerbound", "no_timeline_lowerbound",
-    "rightsize", "evaluate", "ALGORITHMS",
+    "rightsize", "evaluate", "evaluate_many", "ALGORITHMS",
     "eliminate_nodes", "concentration_rounding", "solve_lp_pdhg",
-    "PDHGResult",
+    "PDHGResult", "ProblemBatch", "pack_problems", "solve_lp_many",
 ]

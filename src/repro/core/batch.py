@@ -1,0 +1,357 @@
+"""Batched many-instance LP engine: pad-and-stack + one fused PDHG solve.
+
+The paper's §VI protocol (and every fleet-scale sweep in the related
+work) evaluates algorithms over *grids* of instances.  This module packs
+B ``Problem`` instances into ragged-safe ``(B, ...)`` arrays and runs the
+matrix-free PDHG mapping LP for all of them in a single compiled solve —
+the whole iteration (congestion operator, adjoint, both projections) is
+batched, so one ``lax.scan`` over iterations advances every instance at
+once instead of B sequential solves.
+
+Padding scheme (exact — padded coordinates never perturb real ones):
+
+  * tasks      — zero demand, span [0, 0]: zero operator weight, zero
+                 congestion, zero dual contribution;
+  * node-types — unit capacity but *zero operator weight* and an
+                 effectively-infinite price (``PAD_COST``), masked
+                 infeasible for every task so ``x`` never selects them;
+  * dimensions — zero demand over unit capacity: zero weight;
+  * timeline   — slots past an instance's trimmed T' have no active
+                 task, so congestion and the (zero-initialized) dual
+                 iterate stay identically zero there.
+
+Both simplex projections are padding-exact as well: appended ``-inf``/
+zero entries never enter the sorted-threshold count, so the projected
+real coordinates match the unbatched projection bit-for-bit up to float
+reassociation.  ``solve_lp_pdhg`` is the B=1 special case of this engine,
+so the per-instance and batched paths share one implementation.
+
+The forward map can run through the batch-dim-aware Pallas congestion
+kernel (``operator='pallas'``, grid over B; see kernels/congestion.py),
+the dense mask-matmul form it implements (``'dense'``), or the O((n+T)D)
+difference-array form (``'cumsum'``, the default).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .lp_pdhg import PDHGResult
+from .problem import Problem, feasible_types, trim_timeline
+
+__all__ = ["ProblemBatch", "pack_problems", "solve_lp_many", "PAD_COST"]
+
+# Padded node-types carry this price: they never accrue congestion (their
+# operator weight is zeroed), so they contribute exactly 0 to the primal,
+# but any accidental use would be unmissable in the objective.
+PAD_COST = 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemBatch:
+    """B timeline-trimmed instances padded to common (n, m, D, T') shapes.
+
+    problems: the trimmed per-instance ``Problem``s (for unpacking).
+    dem:   (B, n, D) float64, padded tasks/dims zero.
+    start: (B, n) int32, padded tasks [0, 0].
+    end:   (B, n) int32.
+    cap:   (B, m, D) float64, padded types/dims one.
+    cost:  (B, m) float64, padded types ``PAD_COST``.
+    feas:  (B, n, m) bool — per-instance feasible pairs; padded tasks may
+           use any *real* type (zero demand fits everywhere), padded
+           types are feasible for no task.
+    task_mask: (B, n) bool; type_mask: (B, m) bool.
+    Tp: common (max) trimmed timeline length.
+    """
+
+    problems: tuple[Problem, ...]
+    dem: np.ndarray
+    start: np.ndarray
+    end: np.ndarray
+    cap: np.ndarray
+    cost: np.ndarray
+    feas: np.ndarray
+    task_mask: np.ndarray
+    type_mask: np.ndarray
+    Tp: int
+
+    @property
+    def B(self) -> int:
+        return self.dem.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.dem.shape[1]
+
+    @property
+    def m(self) -> int:
+        return self.cap.shape[1]
+
+    @property
+    def D(self) -> int:
+        return self.dem.shape[2]
+
+    def weights(self) -> np.ndarray:
+        """(B, n, m, D) operator weights dem/cap, zeroed on padding."""
+        w = self.dem[:, :, None, :] / self.cap[:, None, :, :]
+        return w * self.type_mask[:, None, :, None]
+
+
+def pack_problems(problems) -> ProblemBatch:
+    """Trim each instance's timeline, then pad-and-stack the batch."""
+    problems = list(problems)
+    if not problems:
+        raise ValueError("pack_problems needs at least one instance")
+    trimmed = []
+    for p in problems:
+        if p.n == 0:
+            raise ValueError("cannot batch an empty instance")
+        trimmed.append(trim_timeline(p)[0])
+    n = max(t.n for t in trimmed)
+    m = max(t.m for t in trimmed)
+    D = max(t.D for t in trimmed)
+    Tp = max(t.T for t in trimmed)
+    B = len(trimmed)
+
+    dem = np.zeros((B, n, D))
+    start = np.zeros((B, n), np.int32)
+    end = np.zeros((B, n), np.int32)
+    cap = np.ones((B, m, D))
+    cost = np.full((B, m), PAD_COST)
+    feas = np.zeros((B, n, m), bool)
+    task_mask = np.zeros((B, n), bool)
+    type_mask = np.zeros((B, m), bool)
+    for b, t in enumerate(trimmed):
+        dem[b, : t.n, : t.D] = t.dem
+        start[b, : t.n] = t.start
+        end[b, : t.n] = t.end
+        cap[b, : t.m, : t.D] = t.node_types.cap
+        cost[b, : t.m] = t.node_types.cost
+        feas[b, : t.n, : t.m] = feasible_types(t)
+        feas[b, t.n :, : t.m] = True  # zero-demand pad tasks fit anywhere
+        task_mask[b, : t.n] = True
+        type_mask[b, : t.m] = True
+    return ProblemBatch(
+        problems=tuple(trimmed), dem=dem, start=start, end=end, cap=cap,
+        cost=cost, feas=feas, task_mask=task_mask, type_mask=type_mask,
+        Tp=Tp,
+    )
+
+
+# --- projections -----------------------------------------------------------
+# Water-filling thresholds found by Newton's method on the piecewise-linear
+# residual instead of a sort: XLA's sort lowers to an element-serial
+# comparator loop on CPU, which would put a batch-size-independent floor
+# under every PDHG iteration, while Newton is pure element-wise arithmetic
+# that vectorizes across everything the engine stacks.  Starting left of
+# the root, the iteration is monotone; with <= m breakpoints it is *exact*
+# for the task simplex after m steps.
+
+_NEWTON_ITERS_Y = 12
+
+
+def _project_simplex_masked(v, mask):
+    """Project rows (last axis) of v onto the simplex over mask==True."""
+    neg = jnp.finfo(v.dtype).min
+    theta = jnp.where(mask, v, neg).max(axis=-1, keepdims=True) - 1.0
+    # unrolled so XLA fuses the whole chain into a handful of kernels
+    # (a fori_loop would re-dispatch ~6 tiny ops per Newton step)
+    for _ in range(v.shape[-1] + 1):  # piecewise-linear: exact in m+1 steps
+        r = jnp.sum(jnp.where(mask, jnp.maximum(v - theta, 0.0), 0.0),
+                    axis=-1, keepdims=True)
+        k = jnp.sum(jnp.where(mask, (v > theta), False), axis=-1,
+                    keepdims=True)
+        theta = theta + (r - 1.0) / jnp.maximum(k, 1)
+    out = jnp.where(mask, jnp.maximum(v - theta, 0.0), 0.0)
+    return out / (out.sum(axis=-1, keepdims=True) + 1e-30)
+
+
+def _project_capped_simplex_td(y, cap):
+    """Project y (B, T', m, D) onto {y >= 0, sum_{t,d} y <= cap} per (b, m).
+
+    cap: (B, 1, m, 1).  Axis-aware so the dual iterate never needs a
+    transpose inside the scan.
+    """
+    y = jnp.maximum(y, 0.0)
+    total = jnp.sum(y, axis=(1, 3), keepdims=True)
+    theta = jnp.zeros_like(total)
+    for _ in range(_NEWTON_ITERS_Y):  # unrolled: see _project_simplex_masked
+        r = jnp.sum(jnp.maximum(y - theta, 0.0), axis=(1, 3), keepdims=True)
+        k = jnp.sum(y > theta, axis=(1, 3), keepdims=True)
+        theta = theta + jnp.maximum(r - cap, 0.0) / jnp.maximum(k, 1)
+    shrunk = jnp.maximum(y - theta, 0.0)
+    # scale out any Newton residue: keeps sum <= cap exactly, so the dual
+    # value G(y) stays a certified lower bound
+    ssum = jnp.sum(shrunk, axis=(1, 3), keepdims=True)
+    shrunk = shrunk * (cap / jnp.maximum(ssum, cap))
+    return jnp.where(total <= cap, y, shrunk)
+
+
+# --- congestion operator, three interchangeable forms ----------------------
+
+def _make_operators(w_all, start, end, Tp: int, operator: str):
+    """fwd_all: (B, n, m) -> (B, T', m, D); adj_all: its exact adjoint.
+
+    All layouts are chosen so the scan body is transpose-free: the dual
+    iterate lives as (B, T', m, D), weights as (B, n, m, D), and the two
+    activity layouts are materialized once outside the scan.  Each form
+    applies the whole batch in O(1) XLA ops — at sweep sizes per-op
+    dispatch dominates, so the batch must live *inside* single ops for
+    batching to pay off.
+    """
+    B, n, m, D = w_all.shape
+    w_flat = w_all.reshape(B, n, m * D)
+
+    if operator == "dense":
+        t_ids = jnp.arange(Tp, dtype=jnp.int32)
+        act_nt = ((start[:, :, None] <= t_ids[None, None, :])
+                  & (t_ids[None, None, :] <= end[:, :, None])
+                  ).astype(jnp.float32)  # (B, n, T')
+        act_tn = act_nt.transpose(0, 2, 1)  # (B, T', n)
+
+        def fwd_all(xv):
+            xw = (xv[..., None] * w_all).reshape(B, n, m * D)
+            return jnp.matmul(act_tn, xw).reshape(B, Tp, m, D)
+
+        def adj_all(yv):
+            z = jnp.matmul(act_nt, yv.reshape(B, Tp, m * D))
+            return jnp.sum(z.reshape(B, n, m, D) * w_all, axis=3)
+        return fwd_all, adj_all
+
+    if operator == "cumsum":
+        # O((n+T)D) difference-array form: scatter +xw at start, -xw past
+        # end, prefix-sum over time; adjoint reads span sums off an
+        # exclusive prefix-sum.  One batched scatter/gather per apply.
+        def fwd_all(xv):
+            xw = (xv[..., None] * w_all).reshape(B, n, m * D)
+
+            def one(xw_b, s_b, e_b):
+                delta = jnp.zeros((Tp + 1, m * D), xw_b.dtype)
+                delta = delta.at[s_b].add(xw_b)
+                delta = delta.at[e_b + 1].add(-xw_b)
+                return jnp.cumsum(delta[:Tp], axis=0)
+
+            return jax.vmap(one)(xw, start, end).reshape(B, Tp, m, D)
+
+        def adj_all(yv):
+            C = jnp.cumsum(yv.reshape(B, Tp, m * D), axis=1)
+            Cx = jnp.concatenate([jnp.zeros_like(C[:, :1]), C], axis=1)
+
+            def one(Cx_b, s_b, e_b):
+                return Cx_b[e_b + 1] - Cx_b[s_b]  # (n, m*D) span sums
+
+            span = jax.vmap(one)(Cx, start, end).reshape(B, n, m, D)
+            return jnp.sum(span * w_all, axis=3)
+        return fwd_all, adj_all
+
+    if operator == "pallas":
+        from repro.kernels import ops as kops
+
+        # one (B*m)-group kernel launch per forward: group g = b*m + B
+        start_g = jnp.repeat(start, m, axis=0)
+        end_g = jnp.repeat(end, m, axis=0)
+        w_g = w_all.transpose(0, 2, 1, 3).reshape(B * m, n, D)
+
+        def fwd_all(xv):
+            x_g = xv.transpose(0, 2, 1).reshape(B * m, n)
+            cong = kops.congestion_many(start_g, end_g,
+                                        w_g * x_g[:, :, None], Tp)
+            return cong.reshape(B, m, Tp, D).transpose(0, 2, 1, 3)
+
+        _, adj_cumsum = _make_operators(w_all, start, end, Tp, "cumsum")
+        return fwd_all, adj_cumsum  # adjoint of the same linear map
+
+    raise ValueError(f"unknown operator {operator!r}")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("iters", "Tp", "operator", "power_iters"))
+def _pdhg_run_many(w_all, start, end, feas, cost, step_scale, iters: int,
+                   Tp: int, operator: str = "cumsum", power_iters: int = 12):
+    B, n, m, D = w_all.shape
+    fwd_all, adj_all = _make_operators(w_all, start, end, Tp, operator)
+
+    # ||A||_2 per instance: power iteration on A^T A from the (nonnegative,
+    # deterministic, padding-invariant) feasibility pattern.
+    v = feas.astype(jnp.float32)
+    norm = jnp.ones((B,), jnp.float32)
+    for _ in range(power_iters):
+        v2 = adj_all(fwd_all(v))
+        norm = jnp.sqrt(jnp.sum(v2 * v2, axis=(1, 2)))
+        v = v2 / (norm[:, None, None] + 1e-30)
+    op_norm = jnp.sqrt(norm)
+    tau = (step_scale / (op_norm + 1e-30))[:, None, None]        # vs (B,n,m)
+    sigma = tau[..., None]                                    # vs (B,T',m,D)
+    cap = cost[:, None, :, None]                              # vs (B,T',m,D)
+
+    x = feas.astype(jnp.float32)
+    x = x / x.sum(axis=2, keepdims=True)
+    y = jnp.zeros((B, Tp, m, D), jnp.float32)
+
+    def step(carry, _):
+        x, y, x_prev = carry
+        x_bar = 2.0 * x - x_prev
+        y_new = _project_capped_simplex_td(y + sigma * fwd_all(x_bar), cap)
+        x_new = _project_simplex_masked(x - tau * adj_all(y_new), feas)
+        return (x_new, y_new, x), None
+
+    (x, y, _), _ = jax.lax.scan(step, (x, y, x), None, length=iters)
+
+    cong = fwd_all(x)  # (B, T', m, D)
+    primal = jnp.sum(cost * cong.max(axis=(1, 3)), axis=1)
+    wty = adj_all(y)   # (B, n, m)
+    wty = jnp.where(feas, wty, jnp.inf)
+    dual = jnp.sum(wty.min(axis=2), axis=1)
+    return x, primal, dual
+
+
+# 'auto' picks the dense one-dot-per-application operator while the
+# activity matrix fits comfortably in memory, else the O((n+T)D) form.
+_DENSE_ACT_BUDGET = 64 * 1024 * 1024  # elements of (B, n, T')
+
+
+def solve_lp_many(problems, iters: int = 2000, step_scale: float = 0.9,
+                  operator: str = "auto") -> list[PDHGResult]:
+    """One fused PDHG solve of the mapping LP for B instances.
+
+    ``problems`` is a sequence of ``Problem``s or an already-packed
+    ``ProblemBatch``.  Returns one ``PDHGResult`` per instance, sliced
+    back to its own (n, m) shapes: primal upper bound, certified dual
+    lower bound, and the argmax-rounded mapping for the placement phase.
+    """
+    batch = problems if isinstance(problems, ProblemBatch) \
+        else pack_problems(problems)
+    if operator == "auto":
+        operator = ("dense" if batch.B * batch.n * batch.Tp
+                    <= _DENSE_ACT_BUDGET else "cumsum")
+    x, primal, dual = _pdhg_run_many(
+        jnp.asarray(batch.weights(), jnp.float32),
+        jnp.asarray(batch.start), jnp.asarray(batch.end),
+        jnp.asarray(batch.feas),
+        jnp.asarray(batch.cost, jnp.float32),
+        jnp.float32(step_scale),
+        iters=iters, Tp=batch.Tp, operator=operator,
+    )
+    x = np.asarray(x)
+    primal = np.asarray(primal)
+    dual = np.asarray(dual)
+    results = []
+    for b, t in enumerate(batch.problems):
+        x_b = x[b, : t.n, : t.m]
+        feas_b = batch.feas[b, : t.n, : t.m]
+        mapping = np.where(feas_b, x_b, -1.0).argmax(axis=1)
+        results.append(PDHGResult(
+            x=x_b,
+            objective=float(primal[b]),
+            lower_bound=float(dual[b]),
+            gap=float(primal[b] - dual[b]),
+            iters=iters,
+            mapping=mapping.astype(np.int64),
+            x_max=x_b.max(axis=1),
+        ))
+    return results

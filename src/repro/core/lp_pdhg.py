@@ -20,18 +20,22 @@ Both the primal objective F(x) (an upper bound on the LP optimum) and the
 dual value G(y) = sum_u min_B (W^T y)(u, B) (a certified LOWER bound by
 weak duality — hence still a valid lower bound on cost(opt)) are reported;
 tests check the gap closes against HiGHS.
+
+The iteration itself lives in ``repro.core.batch``: the batched
+fleet-sweep engine solves B instances in one fused scan, and this module's
+``solve_lp_pdhg`` is its B=1 case.  This file keeps the problem
+description, the result dataclass, and the difference-array operator
+primitives.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .problem import Problem, active_mask, feasible_types, trim_timeline
+from .problem import Problem
 
 __all__ = ["PDHGResult", "solve_lp_pdhg"]
 
@@ -45,16 +49,6 @@ class PDHGResult:
     iters: int
     mapping: np.ndarray
     x_max: np.ndarray
-
-
-def _congestion_fwd(x_col, w, act):
-    """(T', D) congestion of one type: act (n, T'), w (n, D)."""
-    return jnp.einsum("nt,nd->td", act * x_col[:, None], w)
-
-
-def _congestion_adj(y, w, act):
-    """adjoint: (n,) contribution  sum_{t in span, d} y[t,d] w[u,d]."""
-    return jnp.einsum("td,nt,nd->n", y, act, w)
 
 
 # --- O(n + T) difference-array formulation (beyond-paper optimization) ----
@@ -80,139 +74,20 @@ def _congestion_adj_cumsum(y, w, start, end):
     return jnp.einsum("nd,nd->n", w, span)
 
 
-def _project_simplex_masked(v, mask):
-    """Project each row of v onto the simplex restricted to mask==True."""
-    big = 1e30
-    v = jnp.where(mask, v, -big)
-    m = v.shape[-1]
-    u = jnp.sort(v, axis=-1)[:, ::-1]
-    css = jnp.cumsum(u, axis=-1)
-    idx = jnp.arange(1, m + 1)
-    cond = u * idx > (css - 1.0)
-    rho = jnp.sum(cond, axis=-1)
-    theta = (jnp.take_along_axis(css, (rho - 1)[:, None], axis=1)[:, 0]
-             - 1.0) / rho
-    out = jnp.maximum(v - theta[:, None], 0.0)
-    return jnp.where(mask, out, 0.0)
-
-
-def _project_capped_simplex(y, cap):
-    """Project flat y onto {y >= 0, sum(y) <= cap}."""
-    y = jnp.maximum(y, 0.0)
-    total = y.sum()
-
-    def shrink(yv):
-        # project onto the simplex of size cap: sort-based threshold
-        u = jnp.sort(yv)[::-1]
-        css = jnp.cumsum(u)
-        k = jnp.arange(1, yv.shape[0] + 1)
-        cond = u * k > (css - cap)
-        rho = jnp.sum(cond)
-        theta = (css[rho - 1] - cap) / rho
-        return jnp.maximum(yv - theta, 0.0)
-
-    return jax.lax.cond(total <= cap, lambda v: v, shrink, y)
-
-
-@functools.partial(jax.jit, static_argnames=("iters", "Tp", "operator"))
-def _pdhg_run(w_all, act, start, end, feas, cost, tau, sigma, iters: int,
-              Tp: int, operator: str = "cumsum"):
-    n, m = feas.shape
-
-    x = feas.astype(jnp.float32)
-    x = x / x.sum(axis=1, keepdims=True)
-    D = w_all.shape[2]
-    y = jnp.zeros((m, Tp, D), jnp.float32)
-
-    if operator == "cumsum":  # O((n+T)D) difference-array operators
-        def fwd_all(xv):
-            return jax.vmap(
-                lambda xb, wb: _congestion_fwd_cumsum(xb, wb, start, end,
-                                                      Tp),
-                in_axes=(1, 0))(xv, w_all)  # (m, T', D)
-
-        def adj_all(yv):
-            return jax.vmap(
-                lambda yb, wb: _congestion_adj_cumsum(yb, wb, start, end),
-                in_axes=(0, 0))(yv, w_all).T  # (n, m)
-    else:  # dense mask matmul (the Pallas congestion kernel's form)
-        def fwd_all(xv):
-            return jax.vmap(
-                lambda xb, wb: _congestion_fwd(xb, wb, act),
-                in_axes=(1, 0))(xv, w_all)
-
-        def adj_all(yv):
-            return jax.vmap(
-                lambda yb, wb: _congestion_adj(yb, wb, act),
-                in_axes=(0, 0))(yv, w_all).T
-
-    def step(carry, _):
-        x, y, x_prev = carry
-        x_bar = 2.0 * x - x_prev
-        y_new = y + sigma * fwd_all(x_bar)
-        y_new = jax.vmap(
-            lambda yb, cb: _project_capped_simplex(yb.reshape(-1), cb)
-            .reshape(Tp, D))(y_new, cost)
-        g = adj_all(y_new)
-        x_new = _project_simplex_masked(x - tau * g, feas)
-        return (x_new, y_new, x), None
-
-    (x, y, _), _ = jax.lax.scan(step, (x, y, x), None, length=iters)
-
-    cong = fwd_all(x)  # (m, T', D)
-    primal = jnp.sum(cost * cong.reshape(m, -1).max(axis=1))
-    # dual: G(y) = sum_u min_B (W^T y)(u, B) over feasible B
-    wty = adj_all(y)
-    wty = jnp.where(feas, wty, jnp.inf)
-    dual = jnp.sum(wty.min(axis=1))
-    return x, primal, dual
-
-
 def solve_lp_pdhg(problem: Problem, iters: int = 2000,
                   step_scale: float = 0.9,
-                  operator: str = "cumsum") -> PDHGResult:
-    """operator='cumsum' uses the O((n+T)D) difference-array form of the
+                  operator: str = "auto") -> PDHGResult:
+    """Single-instance PDHG solve — the B=1 case of the batched engine
+    (``repro.core.batch.solve_lp_many``), so per-instance and fleet-sweep
+    solves share one implementation.
+
+    operator='cumsum' uses the O((n+T)D) difference-array form of the
     congestion operator (beyond-paper; linear-time iterations); 'dense'
-    uses the mask-matmul form matching the Pallas kernel."""
-    trimmed, _ = trim_timeline(problem)
-    n, m, D = trimmed.n, trimmed.m, trimmed.D
-    Tp = trimmed.T
-    act = jnp.asarray(active_mask(trimmed), jnp.float32)  # (n, T')
-    start = jnp.asarray(trimmed.start, jnp.int32)
-    end = jnp.asarray(trimmed.end, jnp.int32)
-    w_all = jnp.asarray(
-        trimmed.dem[None, :, :] / trimmed.node_types.cap[:, None, :],
-        jnp.float32)  # (m, n, D)
-    feas = jnp.asarray(feasible_types(trimmed))
-    cost = jnp.asarray(trimmed.node_types.cost, jnp.float32)
+    uses the mask-matmul form matching the Pallas kernel; 'pallas' routes
+    the forward map through the batched Pallas congestion kernel itself;
+    'auto' picks dense vs cumsum by memory footprint.
+    """
+    from .batch import solve_lp_many
 
-    # ||A||_2 bound: power iteration on the stacked operator
-    key = jax.random.PRNGKey(0)
-    v = jax.random.normal(key, (n, m))
-    for _ in range(12):
-        u = jax.vmap(lambda xb, wb: _congestion_fwd(xb, wb, act),
-                     in_axes=(1, 0))(v, w_all)
-        v2 = jax.vmap(lambda yb, wb: _congestion_adj(yb, wb, act),
-                      in_axes=(0, 0))(u, w_all).T
-        norm = jnp.linalg.norm(v2)
-        v = v2 / (norm + 1e-30)
-    op_norm = jnp.sqrt(norm)
-    tau = step_scale / op_norm
-    sigma = step_scale / op_norm
-
-    x, primal, dual = _pdhg_run(w_all, act, start, end, feas, cost,
-                                jnp.float32(tau), jnp.float32(sigma),
-                                iters, Tp, operator)
-    x_np = np.asarray(x)
-    mapping = np.where(
-        np.asarray(feas).any(axis=1),
-        np.asarray(jnp.where(feas, x, -1.0).argmax(axis=1)), 0)
-    return PDHGResult(
-        x=x_np,
-        objective=float(primal),
-        lower_bound=float(dual),
-        gap=float(primal - dual),
-        iters=iters,
-        mapping=mapping.astype(np.int64),
-        x_max=x_np.max(axis=1),
-    )
+    return solve_lp_many([problem], iters=iters, step_scale=step_scale,
+                         operator=operator)[0]

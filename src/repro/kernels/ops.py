@@ -18,7 +18,7 @@ from . import congestion as _congestion
 from . import fit as _fit
 from . import ref
 
-__all__ = ["on_tpu", "congestion", "fit_scores"]
+__all__ = ["on_tpu", "congestion", "congestion_many", "fit_scores"]
 
 _EPS = 1e-7
 
@@ -36,6 +36,19 @@ def congestion(start, end, w, T: int, use_ref: bool = False):
     if use_ref:
         return ref.congestion_ref(start, end, w, T)
     return _congestion.congestion_pallas(
+        start, end, w, T, interpret=not on_tpu()
+    )
+
+
+def congestion_many(start, end, w, T: int, use_ref: bool = False):
+    """(G, T, K) batched interval congestion; Pallas kernel unless
+    ``use_ref``.  start/end: (G, n); w: (G, n, K)."""
+    start = jnp.asarray(start, jnp.int32)
+    end = jnp.asarray(end, jnp.int32)
+    w = jnp.asarray(w, jnp.float32)
+    if use_ref:
+        return ref.congestion_many_ref(start, end, w, T)
+    return _congestion.congestion_many_pallas(
         start, end, w, T, interpret=not on_tpu()
     )
 

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["congestion_ref", "fit_scores_ref"]
+__all__ = ["congestion_ref", "congestion_many_ref", "fit_scores_ref"]
 
 
 def congestion_ref(start, end, w, T: int):
@@ -21,6 +21,18 @@ def congestion_ref(start, end, w, T: int):
     t = jnp.arange(T, dtype=jnp.int32)
     mask = (start[None, :] <= t[:, None]) & (t[:, None] <= end[None, :])
     return mask.astype(w.dtype) @ w
+
+
+def congestion_many_ref(start, end, w, T: int):
+    """out[g, t, k] = sum_u [start_gu <= t <= end_gu] * w[g, u, k].
+
+    start, end: (G, n) int32; w: (G, n, K); out: (G, T, K) — the batched
+    interval-congestion operator behind the many-instance LP engine.
+    """
+    t = jnp.arange(T, dtype=jnp.int32)
+    mask = (start[:, None, :] <= t[None, :, None]) \
+        & (t[None, :, None] <= end[:, None, :])  # (G, T, n)
+    return jnp.einsum("gtn,gnk->gtk", mask.astype(w.dtype), w)
 
 
 def fit_scores_ref(rem, dem, mask, inv_cap):

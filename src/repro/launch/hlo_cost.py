@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import json
 import re
 
 __all__ = ["analyze", "HloCost"]
@@ -144,7 +143,10 @@ def analyze(hlo_text: str) -> HloCost:
         if base.endswith("-start"):
             base = base[: -len("-start")]
         if base == "dot":
-            lhs = rest.split(",")[0].strip().lstrip("%")
+            # operands may carry inline types ("dot(f32[8,16]{1,0} %x, ...")
+            # whose commas break naive splitting: take the first %-symbol
+            om = re.search(r"%([\w.\-]+)", rest)
+            lhs = om.group(1) if om else rest.split(",")[0].strip()
             lhs_type = symbols.get(lhs, "")
             cm = _CONTRACT_RE.search(line)
             contract = 1

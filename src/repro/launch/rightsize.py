@@ -15,11 +15,9 @@ from __future__ import annotations
 import argparse
 import collections
 
-import numpy as np
 
 from repro.core import (
     evaluate,
-    lp_lowerbound,
     no_timeline_lowerbound,
     rightsize,
     trim_timeline,

@@ -14,7 +14,6 @@ import jax.numpy as jnp
 
 from repro.launch.train import pick_config
 from repro.models import decode_step, init_params, prefill
-from repro.models.model import _run_encoder
 
 
 def run(argv=None):

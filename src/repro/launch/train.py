@@ -16,11 +16,9 @@ detection); run it twice with the same --ckpt-dir and it resumes.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.models import ModelConfig, init_params

@@ -17,7 +17,6 @@ Block kinds:
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 __all__ = ["ModelConfig", "SubBlock", "Segment", "build_segments"]
 

@@ -13,17 +13,29 @@ from __future__ import annotations
 import concurrent.futures as cf
 import os
 import re
-import shutil
 
 import jax
 import jax.numpy as jnp
-import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:  # optional serialization deps — the 'train' extra in pyproject.toml
+    import msgpack
+    import zstandard as zstd
+except ImportError:  # gate at use, not import, so repro.train stays loadable
+    msgpack = None
+    zstd = None
 
 __all__ = ["save", "restore", "latest_step", "Checkpointer"]
 
 _STEP_RE = re.compile(r"^step_(\d+)\.ckpt$")
+
+
+def _require_serialization():
+    if msgpack is None or zstd is None:
+        raise ImportError(
+            "checkpointing needs msgpack + zstandard: "
+            "pip install -e '.[train]'"
+        )
 
 
 def _flatten(tree) -> dict:
@@ -55,6 +67,7 @@ def _unflatten_into(tree, flat: dict):
 
 def save(path: str, tree, step: int) -> str:
     """Atomic save: write tmp, fsync, rename."""
+    _require_serialization()
     os.makedirs(path, exist_ok=True)
     fname = os.path.join(path, f"step_{step}.ckpt")
     tmp = fname + ".tmp"
@@ -80,6 +93,7 @@ def restore(path: str, like_tree, step: int | None = None,
     """Restore into the structure of ``like_tree``.  ``shardings`` (an
     optional matching pytree of Sharding/None) re-places leaves onto a
     possibly different mesh — the elastic-rescale path."""
+    _require_serialization()
     step = latest_step(path) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {path}")

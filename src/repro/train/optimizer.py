@@ -7,7 +7,6 @@ HBM footprint of m/v for the 1T-param config — see EXPERIMENTS §Dry-run).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

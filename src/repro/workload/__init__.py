@@ -1,7 +1,12 @@
 """Workload substrate: trace generators, cost models, LM-job adapters."""
 
 from .cost_models import homogeneous_cost, heterogeneous_cost, gce_like_cost
-from .synthetic import synthetic_instance, SyntheticSpec
+from .synthetic import (
+    synthetic_instance,
+    synthetic_batch,
+    sweep_specs,
+    SyntheticSpec,
+)
 from .gct import gct_like_instance, load_trace_csv
 from .jobs import (
     DEFAULT_SCHEDULE,
@@ -13,7 +18,7 @@ from .jobs import (
 
 __all__ = [
     "homogeneous_cost", "heterogeneous_cost", "gce_like_cost",
-    "synthetic_instance", "SyntheticSpec",
+    "synthetic_instance", "synthetic_batch", "sweep_specs", "SyntheticSpec",
     "gct_like_instance", "load_trace_csv",
     "DEFAULT_SCHEDULE", "Job", "TPU_SKUS", "fleet_problem",
     "jobs_from_dryrun",

@@ -10,13 +10,15 @@ uniform slots and order them).  Defaults follow Table I:
 from __future__ import annotations
 
 import dataclasses
+import itertools
 
 import numpy as np
 
 from repro.core import NodeTypes, Problem
 from .cost_models import heterogeneous_cost, homogeneous_cost
 
-__all__ = ["SyntheticSpec", "synthetic_instance"]
+__all__ = ["SyntheticSpec", "synthetic_instance", "sweep_specs",
+           "synthetic_batch"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,3 +51,33 @@ def synthetic_instance(spec: SyntheticSpec = SyntheticSpec()) -> Problem:
         dem=dem, start=start, end=end,
         node_types=NodeTypes(cap=cap, cost=cost), T=spec.T,
     )
+
+
+def sweep_specs(base: SyntheticSpec = SyntheticSpec(), seeds: int = 1,
+                **axes) -> list[SyntheticSpec]:
+    """Cartesian sweep grid over spec fields x seeds (paper Table I).
+
+    Each keyword names a ``SyntheticSpec`` field and gives the values to
+    sweep; every combination is replicated over ``seeds`` consecutive
+    seeds.  The grid order is row-major over the axes (in keyword order)
+    with the seed innermost, e.g.::
+
+        sweep_specs(SyntheticSpec(n=200), seeds=2, D=(2, 5, 7))
+
+    yields 6 specs: (D=2, s=0), (D=2, s=1), (D=5, s=0), ...
+    """
+    for name in axes:
+        if not any(f.name == name for f in dataclasses.fields(base)):
+            raise ValueError(f"unknown SyntheticSpec field {name!r}")
+    out = []
+    for combo in itertools.product(*axes.values()):
+        overrides = dict(zip(axes.keys(), combo))
+        for s in range(seeds):
+            out.append(dataclasses.replace(base, seed=s, **overrides))
+    return out
+
+
+def synthetic_batch(specs) -> list[Problem]:
+    """Instantiate a sweep grid — the input to ``core.evaluate_many`` /
+    ``core.solve_lp_many`` (one batched LP solve for the whole grid)."""
+    return [synthetic_instance(spec) for spec in specs]

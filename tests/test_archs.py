@@ -6,8 +6,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import ARCHS, SHAPES, cell_eligible, cells, get_config, \
-    smoke_config
+from repro.configs import ARCHS, cells, get_config, smoke_config
 from repro.models import (
     build_segments,
     decode_step,
@@ -17,6 +16,10 @@ from repro.models import (
     prefill,
 )
 from repro.models.model import _run_encoder
+
+# full-arch forward/decode smoke runs take minutes on CPU: tier-1 runs the
+# core solver suite; select these with `-m slow` (or `-m ""` for everything)
+pytestmark = pytest.mark.slow
 
 KEY = jax.random.PRNGKey(0)
 B, S = 2, 12

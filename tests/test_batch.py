@@ -1,0 +1,265 @@
+"""Batched fleet-sweep engine tests: pad-and-stack exactness, the
+batch-dim-aware Pallas congestion kernel vs its oracle, batched-vs-looped
+LP parity on ragged grids, and the benchmark-smoke acceptance gate
+(identical costs + >=5x LP-phase wall-clock on a B=32 quick-scale grid).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    evaluate,
+    evaluate_many,
+    pack_problems,
+    solve_lp,
+    solve_lp_many,
+    solve_lp_pdhg,
+    trim_timeline,
+    two_phase,
+    verify,
+)
+from repro.core.batch import _make_operators
+from repro.kernels import ops
+from repro.workload import SyntheticSpec, sweep_specs, synthetic_batch, \
+    synthetic_instance
+
+RNG = np.random.default_rng(7)
+
+
+def _ragged_problems():
+    """Mixed (n, m, D, T) instances — the ragged-batch fixture."""
+    shapes = [(50, 3, 2, 12), (80, 5, 4, 24), (30, 2, 3, 8),
+              (120, 6, 5, 30), (64, 4, 2, 16)]
+    return [synthetic_instance(SyntheticSpec(n=n, m=m, D=D, T=T, seed=s))
+            for s, (n, m, D, T) in enumerate(shapes)]
+
+
+class TestPack:
+    def test_padding_invariants(self):
+        problems = _ragged_problems()
+        batch = pack_problems(problems)
+        trimmed = [trim_timeline(p)[0] for p in problems]
+        assert batch.B == len(problems)
+        assert batch.n == max(t.n for t in trimmed)
+        assert batch.m == max(t.m for t in trimmed)
+        assert batch.D == max(t.D for t in trimmed)
+        assert batch.Tp == max(t.T for t in trimmed)
+        w = batch.weights()
+        for b, t in enumerate(trimmed):
+            # real coordinates survive verbatim
+            np.testing.assert_array_equal(batch.dem[b, : t.n, : t.D], t.dem)
+            np.testing.assert_array_equal(batch.start[b, : t.n], t.start)
+            np.testing.assert_array_equal(batch.end[b, : t.n], t.end)
+            np.testing.assert_array_equal(
+                batch.cap[b, : t.m, : t.D], t.node_types.cap)
+            # padded tasks/types/dims carry zero operator weight
+            assert (w[b, t.n :, :, :] == 0).all()
+            assert (w[b, :, t.m :, :] == 0).all()
+            assert (w[b, :, :, t.D :] == 0).all()
+            # padded types are never feasible, padded tasks always are
+            assert not batch.feas[b, :, t.m :].any()
+            assert batch.feas[b, t.n :, : t.m].all()
+            assert batch.feas[b].any(axis=1).all()
+
+    def test_rejects_empty(self):
+        with pytest.raises(ValueError):
+            pack_problems([])
+
+
+class TestBatchedCongestionKernel:
+    @pytest.mark.parametrize("G,n,K,T", [
+        (1, 1, 1, 1),
+        (3, 7, 3, 24),        # sub-block everything
+        (2, 128, 128, 128),   # exact block boundary
+        (5, 300, 10, 130),    # off-block, many instances
+    ])
+    def test_matches_ref(self, G, n, K, T):
+        start = RNG.integers(0, T, (G, n))
+        end = np.minimum(start + RNG.integers(0, max(T // 2, 1), (G, n)),
+                         T - 1)
+        w = RNG.random((G, n, K)).astype(np.float32)
+        out = np.asarray(ops.congestion_many(start, end, w, T))
+        want = np.asarray(ops.congestion_many(start, end, w, T,
+                                              use_ref=True))
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+    def test_small_block_sizes(self):
+        from repro.kernels.congestion import congestion_many_pallas
+        from repro.kernels.ref import congestion_many_ref
+
+        G, n, K, T = 3, 40, 6, 50
+        start = RNG.integers(0, T, (G, n)).astype(np.int32)
+        end = np.minimum(start + RNG.integers(0, 20, (G, n)),
+                         T - 1).astype(np.int32)
+        w = RNG.random((G, n, K)).astype(np.float32)
+        out = np.asarray(congestion_many_pallas(
+            jnp.asarray(start), jnp.asarray(end), jnp.asarray(w), T,
+            block_t=8, block_n=16, block_k=8, interpret=True))
+        want = np.asarray(congestion_many_ref(
+            jnp.asarray(start), jnp.asarray(end), jnp.asarray(w), T))
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+    def test_groups_are_independent(self):
+        """Each grid-over-B group must see only its own instance."""
+        n, K, T = 20, 4, 16
+        start = RNG.integers(0, T, (1, n))
+        end = np.minimum(start + RNG.integers(0, 8, (1, n)), T - 1)
+        w = RNG.random((1, n, K)).astype(np.float32)
+        alone = np.asarray(ops.congestion_many(start, end, w, T))
+        # stack with a decoy instance on either side
+        start3 = np.concatenate([start + 1, start, start], 0)
+        end3 = np.concatenate([end, end, np.minimum(end + 3, T - 1)], 0)
+        w3 = np.concatenate([w * 2, w, w + 1], 0)
+        stacked = np.asarray(ops.congestion_many(start3, end3, w3, T))
+        np.testing.assert_allclose(stacked[1], alone[0], rtol=1e-6,
+                                   atol=1e-6)
+
+
+class TestOperatorForms:
+    def test_adjointness_all_forms(self):
+        """<fwd(x), y> == <x, adj(y)> for dense, cumsum and pallas forms."""
+        batch = pack_problems(_ragged_problems()[:3])
+        w = jnp.asarray(batch.weights(), jnp.float32)
+        start, end = jnp.asarray(batch.start), jnp.asarray(batch.end)
+        B, n, m, D = w.shape
+        x = jnp.asarray(RNG.random((B, n, m)), jnp.float32)
+        y = jnp.asarray(RNG.random((B, batch.Tp, m, D)), jnp.float32)
+        vals = {}
+        for op in ("dense", "cumsum", "pallas"):
+            fwd, adj = _make_operators(w, start, end, batch.Tp, op)
+            lhs = float(jnp.sum(fwd(x) * y))
+            rhs = float(jnp.sum(x * adj(y)))
+            assert abs(lhs - rhs) / max(abs(lhs), 1e-9) < 1e-4, (op, lhs, rhs)
+            vals[op] = lhs
+        assert abs(vals["dense"] - vals["cumsum"]) < 1e-3 * abs(vals["dense"])
+        assert abs(vals["dense"] - vals["pallas"]) < 1e-3 * abs(vals["dense"])
+
+
+class TestSolveLPMany:
+    def test_identical_copies_match_single(self):
+        t, _ = trim_timeline(synthetic_instance(
+            SyntheticSpec(n=80, m=4, D=3, seed=3)))
+        single = solve_lp_pdhg(t, iters=400)
+        for res in solve_lp_many([t, t, t], iters=400):
+            np.testing.assert_array_equal(res.mapping, single.mapping)
+            assert res.objective == pytest.approx(single.objective, rel=1e-6)
+            assert res.lower_bound == pytest.approx(single.lower_bound,
+                                                    rel=1e-6)
+
+    def test_ragged_matches_per_instance_loop(self):
+        problems = _ragged_problems()
+        batched = solve_lp_many(problems, iters=600)
+        for p, res in zip(problems, batched):
+            t, _ = trim_timeline(p)
+            ref = solve_lp_pdhg(t, iters=600)
+            np.testing.assert_array_equal(res.mapping, ref.mapping)
+            assert res.objective == pytest.approx(ref.objective, rel=1e-5)
+            assert res.lower_bound == pytest.approx(ref.lower_bound,
+                                                    rel=1e-5)
+            assert res.x.shape == (t.n, t.m)
+
+    def test_operator_forms_agree_end_to_end(self):
+        problems = _ragged_problems()[:3]
+        by_op = {op: solve_lp_many(problems, iters=120, operator=op)
+                 for op in ("dense", "cumsum", "pallas")}
+        for a, b, c in zip(*by_op.values()):
+            assert a.objective == pytest.approx(b.objective, rel=1e-4)
+            assert a.objective == pytest.approx(c.objective, rel=1e-4)
+            np.testing.assert_array_equal(a.mapping, b.mapping)
+            np.testing.assert_array_equal(a.mapping, c.mapping)
+
+    def test_bounds_bracket_exact_lp(self):
+        """Dual stays below, primal above, the HiGHS optimum; gap small."""
+        problems = [synthetic_instance(SyntheticSpec(n=100, m=4, D=3,
+                                                     seed=s))
+                    for s in range(3)]
+        batched = solve_lp_many(problems, iters=2500)
+        for p, res in zip(problems, batched):
+            t, _ = trim_timeline(p)
+            exact = solve_lp(t).objective
+            assert res.lower_bound <= exact * (1 + 1e-3)
+            assert res.objective >= exact * (1 - 1e-3)
+            assert (res.objective - res.lower_bound) < 0.08 * exact
+
+    def test_mappings_are_placeable(self):
+        problems = _ragged_problems()
+        for p, res in zip(problems, solve_lp_many(problems, iters=300)):
+            t, _ = trim_timeline(p)
+            sol = two_phase(t, res.mapping, fit="first")
+            verify(t, sol)
+
+
+class TestEvaluateMany:
+    def test_matches_looped_evaluate_on_ragged_grid(self):
+        """Batched protocol == per-instance loop: costs identical."""
+        specs = sweep_specs(SyntheticSpec(n=60, m=4, D=3, T=16), seeds=2,
+                            n=(40, 60), D=(2, 3))
+        problems = synthetic_batch(specs) + _ragged_problems()[:2]
+        algos = ("lp-map", "lp-map-f")
+        many = evaluate_many(problems, algos=algos, lp_iters=400)
+        for p, got in zip(problems, many):
+            want = evaluate(p, algos=algos, lp_solver="pdhg", lp_iters=400)
+            assert got["costs"] == want["costs"]
+            assert got["lb"] == pytest.approx(want["lb"], rel=1e-5)
+            for a in algos:
+                assert got["normalized"][a] == pytest.approx(
+                    want["normalized"][a], rel=1e-5)
+
+    def test_sweep_specs_grid(self):
+        specs = sweep_specs(SyntheticSpec(n=10), seeds=2, D=(2, 3),
+                            m=(4, 5))
+        assert len(specs) == 8
+        assert [(s.D, s.m, s.seed) for s in specs[:4]] == [
+            (2, 4, 0), (2, 4, 1), (2, 5, 0), (2, 5, 1)]
+        with pytest.raises(ValueError):
+            sweep_specs(SyntheticSpec(), seeds=1, bogus=(1, 2))
+
+
+class TestBenchmarkSmoke:
+    """The acceptance gate: a B=32 quick-scale synthetic sweep grid must
+    cost-match the per-instance loop and beat it >=5x on LP wall-clock.
+
+    The grid is ragged (12 distinct (n, T) shapes x 2-3 seeds), exactly
+    like the paper's Table-I sweeps — the per-instance loop pays a fresh
+    JIT compile per distinct shape, the batched engine compiles its one
+    padded shape; both are timed cold (caches cleared) on the same grid.
+    """
+
+    def _grid(self):
+        specs = [SyntheticSpec(n=50 + 15 * i, m=5, D=4, T=12 + i, seed=s)
+                 for i in range(12) for s in range(3)][:32]
+        problems = [trim_timeline(p)[0] for p in synthetic_batch(specs)]
+        assert len(problems) == 32
+        return problems
+
+    def test_costs_identical_and_lp_5x_faster(self):
+        problems = self._grid()
+        iters = 300
+
+        jax.clear_caches()
+        t0 = time.perf_counter()
+        batched = solve_lp_many(problems, iters=iters)
+        t_batch = time.perf_counter() - t0
+
+        jax.clear_caches()
+        t0 = time.perf_counter()
+        looped = [solve_lp_pdhg(p, iters=iters) for p in problems]
+        t_loop = time.perf_counter() - t0
+
+        # identical LP mappings -> identical placements -> identical costs
+        for p, rb, rl in zip(problems, batched, looped):
+            np.testing.assert_array_equal(rb.mapping, rl.mapping)
+            cb = two_phase(p, rb.mapping, fit="first",
+                           filling=True).cost(p)
+            cl = two_phase(p, rl.mapping, fit="first",
+                           filling=True).cost(p)
+            assert cb == cl
+
+        speedup = t_loop / max(t_batch, 1e-9)
+        assert speedup >= 5.0, (
+            f"batched {t_batch:.2f}s vs looped {t_loop:.2f}s "
+            f"-> {speedup:.1f}x (< 5x)")

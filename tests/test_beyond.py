@@ -58,7 +58,6 @@ class TestPDHG:
 
     def test_cumsum_fwd_adjoint_consistency(self):
         """<fwd(x), y> == <x, adj(y)> (adjointness) on random tensors."""
-        import jax
         import jax.numpy as jnp
 
         from repro.core.lp_pdhg import (
@@ -151,6 +150,7 @@ class TestLocalSearch:
         assert fixed.num_nodes == 1
         assert fixed.cost(p) == pytest.approx(1.0)
 
+    @pytest.mark.slow
     def test_improves_lp_map_on_gct(self):
         g = gct_like_instance(n=400, m=10, seed=7)
         t, _ = trim_timeline(g)

@@ -21,7 +21,6 @@ class TestFleetPlanning:
 
     def test_measured_demands_used_when_present(self):
         import glob
-        import os
 
         if not glob.glob("results/dryrun*/*__16x16.json"):
             pytest.skip("no dry-run artifacts")

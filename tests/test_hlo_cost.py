@@ -57,7 +57,6 @@ class TestFlops:
 
 class TestCollectives:
     def test_psum_bytes_counted(self):
-        import os
         if jax.device_count() < 2:
             pytest.skip("needs >1 device (dryrun sets 512)")
 

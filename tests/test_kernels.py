@@ -124,6 +124,7 @@ class TestFitKernel:
 
 
 class TestBackendParity:
+    @pytest.mark.slow
     def test_placement_identical_across_backends(self):
         from repro.core import penalty_map, trim_timeline, two_phase, verify
         from repro.workload import SyntheticSpec, synthetic_instance

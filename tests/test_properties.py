@@ -1,7 +1,10 @@
 """Hypothesis property-based tests on the system's invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="install the 'test' extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     NodeTypes,

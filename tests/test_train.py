@@ -8,7 +8,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import smoke_config
+pytest.importorskip("zstandard", reason="install the 'train' extra")
+pytest.importorskip("msgpack", reason="install the 'train' extra")
+
+from repro.configs import smoke_config  # noqa: E402
 from repro.models import init_params
 from repro.train import (
     AdamWConfig,
