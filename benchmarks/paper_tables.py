@@ -6,8 +6,11 @@ for wall time: 'paper' replicates the paper's sizes (n=1000, 5 seeds);
 'quick' shrinks n and seeds for CI.
 
 Each sweep table issues ONE batched LP solve for its whole instance grid
-(``lp='pdhg'``, the fleet-sweep engine in ``repro.core.batch``); pass
-``lp='highs'`` for the paper's original per-instance exact-LP loop.
+(``lp='pdhg'``, the fleet-sweep engine in ``repro.core.batch``) and, with
+``placement='batched'`` (default), ONE lockstep greedy placement per
+protocol combo (``repro.core.place_batch``).  Pass ``lp='highs'`` for the
+paper's original per-instance exact-LP loop and ``placement='loop'`` for
+the per-instance placement loop (identical placements either way).
 """
 
 from __future__ import annotations
@@ -55,19 +58,22 @@ def _highs_entry(p, max_slots):
     return entry
 
 
-def _sweep_eval(groups, sp, lp="pdhg", max_slots=None):
+def _sweep_eval(groups, sp, lp="pdhg", max_slots=None,
+                placement="batched"):
     """Run the §VI protocol over a whole sweep grid.
 
     ``groups[g]`` holds one sweep point's seed-replicated instances.  With
     ``lp='pdhg'`` the entire flattened grid goes through ONE batched LP
-    solve (``evaluate_many``); ``lp='highs'`` reproduces the per-instance
-    exact-LP loop (``max_slots`` caps its constraint rows at GCT scale).
-    Returns one seed-averaged dict per group with the normalized cost per
-    algorithm, 'lb', and per-algo 'wall_s'.
+    solve and (with ``placement='batched'``) ONE lockstep placement per
+    protocol combo (``evaluate_many``); ``lp='highs'`` reproduces the
+    per-instance exact-LP loop (``max_slots`` caps its constraint rows at
+    GCT scale).  Returns one seed-averaged dict per group with the
+    normalized cost per algorithm, 'lb', and per-algo 'wall_s'.
     """
     flat = [p for g in groups for p in g]
     if lp == "pdhg":
-        entries = evaluate_many(flat, algos=ALGOS, lp_iters=sp["lp_iters"])
+        entries = evaluate_many(flat, algos=ALGOS, lp_iters=sp["lp_iters"],
+                                placement=placement)
     else:
         entries = [_highs_entry(p, max_slots) for p in flat]
     rows, i = [], 0
@@ -84,89 +90,97 @@ def _sweep_eval(groups, sp, lp="pdhg", max_slots=None):
 
 
 def _spec_table(figure, axis_name, axis_vals, base, sp, lp,
-                spec_axis=None):
+                spec_axis=None, placement="batched"):
     """Sweep one SyntheticSpec axis: one batched LP for the whole table."""
     specs = sweep_specs(base, seeds=sp["seeds"],
                         **{spec_axis or axis_name: axis_vals})
     problems = synthetic_batch(specs)
     k = sp["seeds"]
     groups = [problems[i * k : (i + 1) * k] for i in range(len(axis_vals))]
-    res = _sweep_eval(groups, sp, lp=lp)
+    res = _sweep_eval(groups, sp, lp=lp, placement=placement)
     return [{"figure": figure, axis_name: v,
              **{a: round(r[a], 4) for a in ALGOS}}
             for v, r in zip(axis_vals, res)]
 
 
-def _gct_table(figure, axis_name, axis_vals, mk, sp, lp):
+def _gct_table(figure, axis_name, axis_vals, mk, sp, lp,
+               placement="batched"):
     """Sweep a GCT-emulation axis: one batched LP for the whole table."""
     groups = [[mk(v, s) for s in range(sp["seeds"])] for v in axis_vals]
-    res = _sweep_eval(groups, sp, lp=lp, max_slots=sp["max_slots"])
+    res = _sweep_eval(groups, sp, lp=lp, max_slots=sp["max_slots"],
+                      placement=placement)
     return [{"figure": figure, axis_name: v,
              **{a: round(r[a], 4) for a in ALGOS}}
             for v, r in zip(axis_vals, res)]
 
 
 # ---------------------------------------------------------------- Fig 7a
-def fig7a(scale="paper", lp="pdhg"):
+def fig7a(scale="paper", lp="pdhg", placement="batched"):
     sp = _scale_params(scale)
     return _spec_table("7a", "D", (2, 5, 7),
-                       SyntheticSpec(n=sp["n"], m=sp["m"]), sp, lp)
+                       SyntheticSpec(n=sp["n"], m=sp["m"]), sp, lp,
+                       placement=placement)
 
 
 # ---------------------------------------------------------------- Fig 7b
-def fig7b(scale="paper", lp="pdhg"):
+def fig7b(scale="paper", lp="pdhg", placement="batched"):
     sp = _scale_params(scale)
     return _spec_table("7b", "m", (5, 10, 15),
-                       SyntheticSpec(n=sp["n"], D=5), sp, lp)
+                       SyntheticSpec(n=sp["n"], D=5), sp, lp,
+                       placement=placement)
 
 
 # ---------------------------------------------------------------- Fig 7c
-def fig7c(scale="paper", lp="pdhg"):
+def fig7c(scale="paper", lp="pdhg", placement="batched"):
     sp = _scale_params(scale)
     rows = _spec_table("7c", "demand_hi", ((0.01, 0.05), (0.01, 0.1),
                                            (0.01, 0.2)),
                        SyntheticSpec(n=sp["n"], m=sp["m"], D=5), sp, lp,
-                       spec_axis="demand")
+                       spec_axis="demand", placement=placement)
     for row in rows:
         row["demand_hi"] = row["demand_hi"][1]
     return rows
 
 
 # ---------------------------------------------------------------- Fig 8a
-def fig8a(scale="paper", lp="pdhg"):
+def fig8a(scale="paper", lp="pdhg", placement="batched"):
     sp = _scale_params(scale)
     return _gct_table(
         "8a", "n", sp["n_sweep"],
-        lambda n, s: gct_like_instance(n=n, m=sp["m"], seed=s), sp, lp)
+        lambda n, s: gct_like_instance(n=n, m=sp["m"], seed=s), sp, lp,
+        placement=placement)
 
 
 # ---------------------------------------------------------------- Fig 8b
-def fig8b(scale="paper", lp="pdhg"):
+def fig8b(scale="paper", lp="pdhg", placement="batched"):
     sp = _scale_params(scale)
     return _gct_table(
         "8b", "m", (4, 7, 10, 13),
-        lambda m, s: gct_like_instance(n=sp["gct_n"], m=m, seed=s), sp, lp)
+        lambda m, s: gct_like_instance(n=sp["gct_n"], m=m, seed=s), sp, lp,
+        placement=placement)
 
 
 # ---------------------------------------------------------------- Fig 9
-def fig9(scale="paper", lp="pdhg"):
+def fig9(scale="paper", lp="pdhg", placement="batched"):
     sp = _scale_params(scale)
     return _spec_table("9", "e", (0.33, 1.0, 2.0, 3.0),
                        SyntheticSpec(n=sp["n"], m=sp["m"], D=5,
-                                     cost_model="heterogeneous"), sp, lp)
+                                     cost_model="heterogeneous"), sp, lp,
+                       placement=placement)
 
 
 # ---------------------------------------------------------------- Fig 10
-def fig10(scale="paper", lp="pdhg"):
+def fig10(scale="paper", lp="pdhg", placement="batched"):
     sp = _scale_params(scale)
     return _gct_table(
         "10", "m", (4, 7, 10, 13),
         lambda m, s: gct_like_instance(n=sp["gct_n"], m=m, seed=s,
-                                       cost_model="gce"), sp, lp)
+                                       cost_model="gce"), sp, lp,
+        placement=placement)
 
 
 # ---------------------------------------------------------------- Fig 11
-def fig11(scale="paper", lp="pdhg"):
+def fig11(scale="paper", lp="pdhg", placement="batched"):
     """PenaltyMap-F vs LP-map-F across the GCT scenarios."""
     sp = _scale_params(scale)
     scenarios = [("hom", dict(cost_model="homogeneous")),
@@ -174,7 +188,8 @@ def fig11(scale="paper", lp="pdhg"):
     points = [(tag, m, kw) for tag, kw in scenarios for m in (4, 10, 13)]
     groups = [[gct_like_instance(n=sp["gct_n"], m=m, seed=s, **kw)
                for s in range(sp["seeds"])] for _, m, kw in points]
-    res = _sweep_eval(groups, sp, lp=lp, max_slots=sp["max_slots"])
+    res = _sweep_eval(groups, sp, lp=lp, max_slots=sp["max_slots"],
+                      placement=placement)
     return [{
         "figure": "11", "scenario": f"{tag}-m{m}",
         "penalty-map-f": round(r["penalty-map-f"], 4),
@@ -185,7 +200,7 @@ def fig11(scale="paper", lp="pdhg"):
 
 
 # ------------------------------------------------------------ §VI-E time
-def runtime(scale="paper", lp="pdhg"):
+def runtime(scale="paper", lp="pdhg", placement="batched"):
     """Paper: PenaltyMap ~1s; LP solve ~15min (CBC) at n=2000, m=13;
     mapping+placement ~1s.  We report HiGHS numbers."""
     n = {"paper": 2000, "default": 1000}.get(scale, 400)
@@ -209,7 +224,7 @@ def runtime(scale="paper", lp="pdhg"):
 
 
 # ------------------------------------------------------------ §VI-F
-def no_timeline(scale="paper", lp="pdhg"):
+def no_timeline(scale="paper", lp="pdhg", placement="batched"):
     """Timeline-aware LP-map-F cost vs the timeline-agnostic lower bound:
     the paper reports ~2x average."""
     sp = _scale_params(scale)
@@ -227,7 +242,7 @@ def no_timeline(scale="paper", lp="pdhg"):
 
 
 # ------------------------------------------------------------ Fig 5
-def near_integrality(scale="paper", lp="pdhg"):
+def near_integrality(scale="paper", lp="pdhg", placement="batched"):
     sp = _scale_params(scale)
     p = synthetic_instance(SyntheticSpec(n=500 if scale == "paper" else 150,
                                          m=10, D=5, seed=0))
@@ -242,7 +257,7 @@ def near_integrality(scale="paper", lp="pdhg"):
 
 
 # ---------------------------------------------------- beyond-paper tables
-def scaling_beyond(scale="default", lp="pdhg"):
+def scaling_beyond(scale="default", lp="pdhg", placement="batched"):
     """HiGHS (exact) vs JAX PDHG (matrix-free, O(n+T)/iter) as n grows —
     the accelerator-native solve path's quality/latency trade."""
     from repro.core import solve_lp_pdhg
@@ -271,7 +286,7 @@ def scaling_beyond(scale="default", lp="pdhg"):
     return rows
 
 
-def local_search_beyond(scale="default", lp="pdhg"):
+def local_search_beyond(scale="default", lp="pdhg", placement="batched"):
     """Node-elimination post-pass on LP-map-F (the consistent beyond-paper
     cost reduction)."""
     sp = _scale_params(scale)
@@ -295,19 +310,26 @@ def local_search_beyond(scale="default", lp="pdhg"):
     return rows
 
 
-def fleet_sweep(scale="default", lp="pdhg"):
-    """The batched engine's headline: LP phase of a ragged Table-I-style
-    sweep grid, one fused padded solve vs the per-instance loop (which
-    pays a fresh JIT compile per distinct instance shape)."""
+def fleet_sweep(scale="default", lp="pdhg", placement="batched"):
+    """The batched engine's headline: LP + placement phases of a ragged
+    Table-I-style sweep grid.  The LP phase runs as one fused padded
+    solve vs the per-instance loop (which pays a fresh JIT compile per
+    distinct instance shape); the placement phase then consumes the
+    batched mappings either through the lockstep ``place_many`` engine
+    or the per-instance ``two_phase`` loop, timing all four
+    {fit} x {filling} protocol combos."""
     import jax
 
-    from repro.core import solve_lp_pdhg, solve_lp_many
+    from repro.core import (pack_problems, place_many, solve_lp_many,
+                            solve_lp_pdhg, two_phase, FIT_POLICIES)
 
     sp = _scale_params(scale)
     shapes = {"quick": 8, "default": 12, "paper": 16}.get(scale, 12)
-    seeds = max(sp["seeds"], 2)
-    base_n = {"quick": 50, "default": 100, "paper": 200}.get(scale, 100)
-    specs = [SyntheticSpec(n=base_n + 25 * i, m=sp["m"], D=5,
+    # seed-replicated like the paper's sweeps: many instances per shape
+    # (that is the fleet shape both batched phases amortize over)
+    seeds = {"quick": 4, "default": 6, "paper": 8}.get(scale, 4)
+    base_n = {"quick": 40, "default": 80, "paper": 160}.get(scale, 80)
+    specs = [SyntheticSpec(n=base_n + 15 * i, m=sp["m"], D=5,
                            T=12 + 2 * i, seed=s)
              for i in range(shapes) for s in range(seeds)]
     problems = [trim_timeline(p)[0] for p in synthetic_batch(specs)]
@@ -323,12 +345,37 @@ def fleet_sweep(scale="default", lp="pdhg"):
     t_loop = time.perf_counter() - t0
     agree = all(np.array_equal(a.mapping, b.mapping)
                 for a, b in zip(batched, looped))
+
+    # placement phase on the batched mappings: lockstep vs per-instance
+    batch = pack_problems(problems)
+    maps = [r.mapping for r in batched]
+    combos = [(fit, filling) for fit in FIT_POLICIES
+              for filling in (False, True)]
+    t0 = time.perf_counter()
+    placed_b = [place_many(batch, maps, fit=fit, filling=filling)
+                for fit, filling in combos]
+    t_place_b = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    placed_l = [[two_phase(t, mp, fit=fit, filling=filling)
+                 for t, mp in zip(batch.problems, maps)]
+                for fit, filling in combos]
+    t_place_l = time.perf_counter() - t0
+    place_agree = all(
+        np.array_equal(a.assign, b.assign)
+        and np.array_equal(a.node_type, b.node_type)
+        for many, loop in zip(placed_b, placed_l)
+        for a, b in zip(many, loop))
     return [{
         "figure": "fleet_sweep(beyond)", "B": len(problems),
         "distinct_shapes": shapes,
         "batched_s": round(t_batch, 2), "looped_s": round(t_loop, 2),
         "speedup": round(t_loop / max(t_batch, 1e-9), 1),
         "mappings_identical": agree,
+        "placement_batched_s": round(t_place_b, 2),
+        "placement_looped_s": round(t_place_l, 2),
+        "placement_speedup": round(
+            t_place_l / max(t_place_b, 1e-9), 1),
+        "placements_identical": place_agree,
     }]
 
 

@@ -1,12 +1,17 @@
 """Benchmark driver: one function per paper table/figure.
 
     python -m benchmarks.run [--scale quick|paper] [--only fig8a,...]
-                             [--lp pdhg|highs] [--out results/paper]
+                             [--lp pdhg|highs]
+                             [--placement batched|loop]
+                             [--out results/paper]
 
 Prints ``table,key=value,...`` CSV rows; writes JSON per table.  With the
 default ``--lp pdhg`` every sweep table funnels its whole instance grid
-through ONE batched LP solve (repro.core.batch); ``--lp highs`` restores
-the paper's per-instance exact-LP loop.  Roofline rows (from dry-run
+through ONE batched LP solve (repro.core.batch), and with the default
+``--placement batched`` the greedy placement phase runs as one lockstep
+``place_many`` per protocol combo (repro.core.place_batch); ``--lp
+highs`` / ``--placement loop`` restore the paper's per-instance loops
+(placements and costs are identical).  Roofline rows (from dry-run
 artifacts, if present) are appended at the end.
 """
 
@@ -27,6 +32,11 @@ def main(argv=None) -> None:
     ap.add_argument("--lp", choices=["pdhg", "highs"], default="pdhg",
                     help="LP backend: batched PDHG sweep engine (one "
                          "solve per table) or per-instance exact HiGHS")
+    ap.add_argument("--placement", choices=["batched", "loop"],
+                    default="batched",
+                    help="greedy placement phase: lockstep batched "
+                         "engine (place_many) or the per-instance "
+                         "two_phase loop (identical placements)")
     ap.add_argument("--only", default="")
     ap.add_argument("--out", default="results/paper")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
@@ -43,7 +53,7 @@ def main(argv=None) -> None:
         if only and name not in only:
             continue
         t0 = time.perf_counter()
-        rows = fn(scale=args.scale, lp=args.lp)
+        rows = fn(scale=args.scale, lp=args.lp, placement=args.placement)
         dt = time.perf_counter() - t0
         with open(os.path.join(args.out, f"{name}.json"), "w") as f:
             json.dump(rows, f, indent=1)

@@ -4,6 +4,7 @@ Public API:
     Problem, NodeTypes, Solution        — data model
     rightsize, evaluate, evaluate_many  — solve / paper-protocol evaluation
     solve_lp_many, pack_problems        — batched fleet-sweep LP engine
+    place_many                          — batched lockstep placement engine
     penalty_map, lp_map, solve_lp       — mapping strategies
     two_phase                           — placement engine
     lp_lowerbound, congestion_lowerbound, no_timeline_lowerbound
@@ -35,6 +36,7 @@ from .local_search import eliminate_nodes
 from .rounding import concentration_rounding
 from .lp_pdhg import solve_lp_pdhg, PDHGResult
 from .batch import ProblemBatch, pack_problems, solve_lp_many
+from .place_batch import place_many
 
 __all__ = [
     "Problem", "NodeTypes", "Solution", "trim_timeline", "active_mask",
@@ -46,4 +48,5 @@ __all__ = [
     "rightsize", "evaluate", "evaluate_many", "ALGORITHMS",
     "eliminate_nodes", "concentration_rounding", "solve_lp_pdhg",
     "PDHGResult", "ProblemBatch", "pack_problems", "solve_lp_many",
+    "place_many",
 ]

@@ -9,10 +9,11 @@ reproduces the paper's §VI protocol:
   * LP-map-F      — LP mapping + filling, min over {first, similarity}
 
 ``evaluate_many(problems)`` runs the protocol over a whole instance grid
-with ONE batched LP solve (the fleet-sweep path): the mapping LPs of all
-instances are packed and solved together by ``core.batch.solve_lp_many``,
-then the greedy placement phase consumes the batched mappings
-per-instance.
+fully batched (the fleet-sweep path): the mapping LPs of all instances
+are packed and solved together by ``core.batch.solve_lp_many``, and the
+greedy placement phase advances all instances in lockstep through
+``core.place_batch.place_many`` (``placement='loop'`` restores the
+per-instance placement loop; costs are identical either way).
 
 All problems are timeline-trimmed internally; solutions are expressed (and
 verified) in trimmed coordinates, which preserves feasibility and cost
@@ -136,22 +137,80 @@ def evaluate(problem: Problem, algos=ALGORITHMS, backend: str = "numpy",
     return _protocol_entry(trimmed, lp_result, lb, algos, backend)
 
 
+def _protocol_many(batch, lp_results, algos, backend: str,
+                   check: bool = True) -> list[dict]:
+    """Batched placement protocol: every (mapping, fit, filling) combo of
+    every algorithm runs as ONE lockstep ``place_many`` over the grid."""
+    from .place_batch import place_many
+
+    B = batch.B
+    out = [{"lb": res.lower_bound, "costs": {}, "normalized": {},
+            "wall_s": {}} for res in lp_results]
+    for algo in algos:
+        t0 = time.perf_counter()
+        filling = algo.endswith("-f")
+        if algo in ("penalty-map", "penalty-map-f"):
+            mapsets = [[penalty_map(t, kind) for t in batch.problems]
+                       for kind in ("avg", "max")]
+        elif algo in ("lp-map", "lp-map-f"):
+            mapsets = [[res.mapping for res in lp_results]]
+        else:
+            # extended algos (e.g. "+ls") keep the per-instance path
+            for b, t in enumerate(batch.problems):
+                sol = rightsize(t, algo, backend=backend,
+                                lp_result=lp_results[b], check=check)
+                out[b]["costs"][algo] = sol.cost(t)
+                out[b]["wall_s"][algo] = sol.meta["wall_s"]
+            continue
+        best: list[Solution | None] = [None] * B
+        best_cost = [float("inf")] * B
+        for maps in mapsets:
+            for fit in FIT_POLICIES:
+                sols = place_many(batch, maps, fit=fit, filling=filling,
+                                  backend=backend, meta={"algo": algo})
+                for b, (t, s) in enumerate(zip(batch.problems, sols)):
+                    c = s.cost(t)
+                    if c < best_cost[b]:
+                        best_cost[b], best[b] = c, s
+        wall = (time.perf_counter() - t0) / B
+        for b, t in enumerate(batch.problems):
+            if check:
+                verify(t, best[b])
+            out[b]["costs"][algo] = best_cost[b]
+            out[b]["wall_s"][algo] = wall
+    for entry in out:
+        lb = max(entry["lb"], 1e-12)
+        entry["normalized"] = {a: c / lb
+                               for a, c in entry["costs"].items()}
+    return out
+
+
 def evaluate_many(problems, algos=ALGORITHMS, backend: str = "numpy",
-                  lp_iters: int = 2000, operator: str = "auto") -> list[dict]:
-    """§VI protocol over a grid of instances with ONE batched LP solve.
+                  lp_iters: int = 2000, operator: str = "auto",
+                  placement: str = "batched") -> list[dict]:
+    """§VI protocol over a grid of instances, fully batched.
 
     Equivalent to ``[evaluate(p, algos, lp_solver='pdhg') for p in
-    problems]`` — the batched engine pads ragged instances exactly, so
+    problems]`` — the batched engines pad ragged instances exactly, so
     costs match the per-instance loop — but the LP phase is a single
-    compiled ``solve_lp_many`` call for the whole grid, which amortizes
-    compilation and vectorizes the PDHG iterations across instances.
-    The greedy placement phase stays per-instance, consuming the batched
-    LP mappings.
+    compiled ``solve_lp_many`` call for the whole grid, and (with
+    ``placement='batched'``, the default) the greedy placement phase
+    advances all instances in lockstep through ``place_many``: one
+    batched feasibility+similarity scoring pass per task event instead
+    of B Python-level ``find_fit`` loops.  ``placement='loop'`` restores
+    the per-instance placement loop; placements (and therefore costs)
+    are identical either way.
     """
-    from .batch import pack_problems, solve_lp_many
+    from .batch import ProblemBatch, pack_problems, solve_lp_many
 
-    batch = pack_problems(problems)  # trims each instance once
+    if placement not in ("loop", "batched"):
+        raise ValueError(
+            f"placement must be 'loop'|'batched', got {placement!r}")
+    batch = problems if isinstance(problems, ProblemBatch) \
+        else pack_problems(problems)  # trims each instance once
     lp_results = solve_lp_many(batch, iters=lp_iters, operator=operator)
+    if placement == "batched":
+        return _protocol_many(batch, lp_results, algos, backend)
     return [
         _protocol_entry(t, res, res.lower_bound, algos, backend)
         for t, res in zip(batch.problems, lp_results)

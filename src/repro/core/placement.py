@@ -85,7 +85,11 @@ class TypePool:
             return None
         if fit == "first":
             return int(np.argmax(feas))  # lowest index == earliest purchased
-        masked = np.where(feas, score, -np.inf)
+        # quantize before the argmax: digits beyond the 9th are float
+        # reassociation noise (einsum kernels differ by layout), and
+        # rounding makes the first-max tie-break identical across the
+        # numpy / Pallas / batched-lockstep scoring paths
+        masked = np.where(feas, np.round(score, 9), -np.inf)
         return int(np.argmax(masked))
 
     def place(self, local_idx: int, dem: np.ndarray, s: int, e: int) -> None:

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["fit_scores_pallas"]
+__all__ = ["fit_scores_pallas", "fit_scores_many_pallas"]
 
 BLOCK_N = 128
 BLOCK_T = 256
@@ -106,3 +106,84 @@ def fit_scores_pallas(
         interpret=interpret,
     )(rem_p, dem_2d, mask_p, inv_2d)
     return feas[:N], dot[:N], norm[:N]
+
+
+def _fit_many_kernel(rem_ref, dem_ref, mask_ref, invcap_ref, feas_ref,
+                     dot_ref, norm_ref):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        feas_ref[...] = jnp.full_like(feas_ref, _BIG)
+        dot_ref[...] = jnp.zeros_like(dot_ref)
+        norm_ref[...] = jnp.zeros_like(norm_ref)
+
+    mask = mask_ref[0].reshape(-1, 1)  # (Tb, 1) in {0, 1}
+    D = rem_ref.shape[2]
+    feas = feas_ref[0]
+    dot = dot_ref[0]
+    norm = norm_ref[0]
+    for d in range(D):  # D is small and static: unrolled VPU loop
+        rem_d = rem_ref[0, :, d, :]  # (Tb, Nb)
+        dem_d = dem_ref[0, d]
+        inv_d = invcap_ref[0, d]
+        margin = jnp.where(mask > 0, rem_d - dem_d, _BIG)
+        feas = jnp.minimum(feas, margin.min(axis=0))
+        rem_n = rem_d * inv_d * mask
+        dot = dot + (dem_d * inv_d) * rem_n.sum(axis=0)
+        norm = norm + (rem_n * rem_n).sum(axis=0)
+    feas_ref[0] = feas
+    dot_ref[0] = dot
+    norm_ref[0] = norm
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_t", "interpret")
+)
+def fit_scores_many_pallas(
+    rem_btdn: jax.Array,  # (B, T, D, N) remaining capacity, node-minor
+    dem: jax.Array,       # (B, D) per-instance task demand
+    mask: jax.Array,      # (B, T) float, 1 inside each instance's span
+    inv_cap: jax.Array,   # (B, D) per-instance 1/cap; 0 on padded dims
+    block_n: int = BLOCK_N,
+    block_t: int = BLOCK_T,
+    interpret: bool = False,
+):
+    """Batched fit scoring: grid over B with the single-instance tiling.
+
+    Returns (feas_margin, dot, rem_norm2), each (B, N) float32 — one
+    lockstep ``place_many`` step scores the pending task of every
+    instance against all its open nodes in this one call.  Padding is
+    exact exactly as in ``fit_scores_pallas``: padded slots carry mask=0
+    (neutral for all three reductions), padded nodes are sliced away by
+    the host, padded dims carry ``inv_cap=0`` (and zero demand), so they
+    only add a neutral ``rem - 0 >= 0`` term to the min-reduction.
+    """
+    B, T, D, N = rem_btdn.shape
+    dtype = jnp.float32
+    N_p = max(pl.cdiv(N, block_n) * block_n, block_n)
+    T_p = max(pl.cdiv(T, block_t) * block_t, block_t)
+    rem_p = jnp.zeros((B, T_p, D, N_p), dtype).at[:, :T, :, :N].set(
+        rem_btdn.astype(dtype))
+    mask_p = jnp.zeros((B, T_p), dtype).at[:, :T].set(mask.astype(dtype))
+    dem_2d = dem.astype(dtype).reshape(B, D)
+    inv_2d = inv_cap.astype(dtype).reshape(B, D)
+
+    grid = (B, N_p // block_n, T_p // block_t)
+    out_shape = [jax.ShapeDtypeStruct((B, N_p), dtype)] * 3
+    out_spec = pl.BlockSpec((1, block_n), lambda b, i, t: (b, i))
+    feas, dot, norm = pl.pallas_call(
+        _fit_many_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, D, block_n),
+                         lambda b, i, t: (b, t, 0, i)),
+            pl.BlockSpec((1, D), lambda b, i, t: (b, 0)),
+            pl.BlockSpec((1, block_t), lambda b, i, t: (b, t)),
+            pl.BlockSpec((1, D), lambda b, i, t: (b, 0)),
+        ],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(rem_p, dem_2d, mask_p, inv_2d)
+    return feas[:, :N], dot[:, :N], norm[:, :N]

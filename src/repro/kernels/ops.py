@@ -18,7 +18,8 @@ from . import congestion as _congestion
 from . import fit as _fit
 from . import ref
 
-__all__ = ["on_tpu", "congestion", "congestion_many", "fit_scores"]
+__all__ = ["on_tpu", "congestion", "congestion_many", "fit_scores",
+           "fit_scores_many"]
 
 _EPS = 1e-7
 
@@ -86,4 +87,50 @@ def fit_scores(rem, dem, s: int, e: int, cap, scored: bool = False,
     dem_n = np.asarray(dem) / np.asarray(cap)
     dem_norm = float(np.linalg.norm(dem_n)) * np.sqrt(span)
     cos = np.asarray(dot) / (dem_norm * np.sqrt(np.asarray(norm2)) + 1e-30)
+    return feas, cos
+
+
+def fit_scores_many(rem, dem, s, e, inv_cap, scored: bool = False,
+                    use_ref: bool = False):
+    """Host-facing batched fit API for the lockstep placement engine.
+
+    rem:     (B, N, T, D) open-node remaining capacities, all instances.
+    dem:     (B, D) the pending task's demand per instance.
+    s, e:    (B,) int inclusive span bounds per instance.
+    inv_cap: (B, D) 1/cap of each instance's targeted node-type, with 0
+             on padded dimensions (so they contribute nothing to the
+             similarity reductions).
+
+    Returns (feasible (B, N) bool, score (B, N) float) — the batched
+    analogue of ``fit_scores``; padded/foreign nodes are masked by the
+    caller at selection time.
+    """
+    rem = np.asarray(rem)
+    B, N, T, D = rem.shape
+    s = np.asarray(s, np.int64)
+    e = np.asarray(e, np.int64)
+    dem_j = jnp.asarray(dem, jnp.float32)
+    inv_j = jnp.asarray(inv_cap, jnp.float32)
+    t_ids = np.arange(T)
+    mask = ((s[:, None] <= t_ids[None, :])
+            & (t_ids[None, :] <= e[:, None])).astype(np.float32)
+    if use_ref:
+        feas_m, dot, norm2 = ref.fit_scores_many_ref(
+            jnp.asarray(rem, jnp.float32), dem_j, jnp.asarray(mask), inv_j
+        )
+    else:
+        rem_btdn = jnp.asarray(
+            np.ascontiguousarray(rem.transpose(0, 2, 3, 1)), jnp.float32)
+        feas_m, dot, norm2 = _fit.fit_scores_many_pallas(
+            rem_btdn, dem_j, jnp.asarray(mask), inv_j,
+            interpret=not on_tpu()
+        )
+    feas = np.asarray(feas_m) >= -_EPS
+    if not scored:
+        return feas, np.zeros((B, N), np.float32)
+    span = (e - s + 1).astype(np.float64)
+    dem_n = np.asarray(dem) * np.asarray(inv_cap)
+    dem_norm = np.linalg.norm(dem_n, axis=1) * np.sqrt(span)  # (B,)
+    cos = np.asarray(dot) / (
+        dem_norm[:, None] * np.sqrt(np.asarray(norm2)) + 1e-30)
     return feas, cos

@@ -8,7 +8,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["congestion_ref", "congestion_many_ref", "fit_scores_ref"]
+__all__ = ["congestion_ref", "congestion_many_ref", "fit_scores_ref",
+           "fit_scores_many_ref"]
 
 
 def congestion_ref(start, end, w, T: int):
@@ -57,4 +58,32 @@ def fit_scores_ref(rem, dem, mask, inv_cap):
     dem_n = dem * inv_cap
     dot = jnp.einsum("ntd,d,t->n", rem_n, dem_n, mask)
     rem_norm2 = jnp.einsum("ntd,ntd,t->n", rem_n, rem_n, mask)
+    return feas_margin, dot, rem_norm2
+
+
+def fit_scores_many_ref(rem, dem, mask, inv_cap):
+    """Batched placement fit scoring — one task per instance, all open
+    nodes of all B instances at once (the lockstep ``place_many`` hot
+    loop).
+
+    rem:     (B, N, T, D) remaining capacity per (instance, node).
+    dem:     (B, D)       the current task's demand, per instance.
+    mask:    (B, T)       1.0 inside that instance's task span.
+    inv_cap: (B, D)       1 / cap of the targeted node-type; 0 on padded
+                          dims (which then contribute nothing to
+                          dot / rem_norm2).
+
+    Returns (feas_margin, dot, rem_norm2), each (B, N) — the batched
+    analogue of ``fit_scores_ref``; padded nodes/slots are the caller's
+    responsibility (mask slots via ``mask``, nodes at selection time).
+    """
+    dtype = rem.dtype
+    big = jnp.asarray(jnp.finfo(dtype).max, dtype)
+    margin = rem - dem[:, None, None, :]
+    masked_margin = jnp.where(mask[:, None, :, None] > 0, margin, big)
+    feas_margin = masked_margin.min(axis=(2, 3))
+    rem_n = rem * inv_cap[:, None, None, :]
+    dem_n = dem * inv_cap
+    dot = jnp.einsum("bntd,bd,bt->bn", rem_n, dem_n, mask)
+    rem_norm2 = jnp.einsum("bntd,bntd,bt->bn", rem_n, rem_n, mask)
     return feas_margin, dot, rem_norm2

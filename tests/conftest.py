@@ -1,0 +1,24 @@
+"""Shared test configuration: bounded-examples Hypothesis profiles.
+
+The fast tier (default) runs property suites with a small bounded
+example count so `pytest -q` stays quick; the scheduled (cron) CI job
+exports ``HYPOTHESIS_PROFILE=thorough`` for a deeper sweep.  Individual
+``@settings(...)`` decorators still override the profile's defaults.
+"""
+
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:  # the 'test' extra is not installed; suites skip
+    settings = None
+
+if settings is not None:
+    _COMMON = dict(
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large],
+    )
+    settings.register_profile("fast", max_examples=15, **_COMMON)
+    settings.register_profile("thorough", max_examples=75, **_COMMON)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "fast"))

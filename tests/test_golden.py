@@ -1,0 +1,60 @@
+"""Golden-table regression: ``evaluate_many`` on a fixed-seed synthetic
+grid must reproduce the committed snapshot under ``results/golden/``.
+
+The snapshot pins the §VI protocol numbers (per-instance costs, LP lower
+bounds and normalized ratios) end-to-end through the batched LP solve
+AND the batched lockstep placement, so future solver or placement
+refactors cannot silently shift paper-table numbers: an intentional
+change must regenerate the snapshot (see the module-level docstring of
+the generating grid inside the JSON) and justify the diff.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from repro.core import evaluate_many
+from repro.workload import SyntheticSpec, sweep_specs, synthetic_batch
+
+GOLDEN = pathlib.Path(__file__).resolve().parent.parent \
+    / "results" / "golden" / "evaluate_many.json"
+
+# penalty-map costs are pure float64 numpy (bitwise stable); the LP-side
+# numbers ride on fp32 XLA reductions, so allow library-level drift —
+# any real regression (a flipped mapping / placement) moves costs by a
+# whole node price, orders of magnitude above this tolerance.
+REL = 1e-5
+
+
+def _grid():
+    specs = sweep_specs(SyntheticSpec(n=60, m=4, D=3, T=16), seeds=2,
+                        n=(40, 60, 80))
+    return synthetic_batch(specs)
+
+
+class TestGoldenEvaluateMany:
+    def test_matches_snapshot(self):
+        want = json.loads(GOLDEN.read_text())
+        entries = evaluate_many(_grid(), lp_iters=want["lp_iters"])
+        assert len(entries) == len(want["entries"])
+        for got, ref in zip(entries, want["entries"]):
+            assert got["lb"] == pytest.approx(ref["lb"], rel=REL)
+            assert set(got["costs"]) == set(ref["costs"])
+            for algo, cost in ref["costs"].items():
+                assert got["costs"][algo] == pytest.approx(
+                    cost, rel=REL), algo
+                assert got["normalized"][algo] == pytest.approx(
+                    ref["normalized"][algo], rel=REL), algo
+
+    def test_snapshot_sanity(self):
+        """The committed snapshot itself is internally consistent."""
+        want = json.loads(GOLDEN.read_text())
+        for ref in want["entries"]:
+            for algo, cost in ref["costs"].items():
+                assert ref["normalized"][algo] == pytest.approx(
+                    cost / ref["lb"], rel=1e-9)
+            # filling never hurts; the LP map beats PenaltyMap here
+            assert ref["costs"]["lp-map-f"] <= ref["costs"]["lp-map"]
+            assert ref["costs"]["penalty-map-f"] \
+                <= ref["costs"]["penalty-map"]

@@ -1,5 +1,14 @@
-"""Validate the trip-count-aware HLO cost accounting against analytic
-FLOP counts on jitted programs with known structure."""
+"""Validate the trip-count-aware HLO cost accounting.
+
+FLOP assertions are stated as analytically derived *bounds and ratios*
+rather than exact constants: XLA's optimized HLO legitimately drifts
+across versions (fusion choices, extra elementwise ops, rematerialized
+transposes), so each test pins (a) the analytic dot-product FLOPs as a
+hard lower bound and (b) trip-count structure via ratios between two
+programs whose per-iteration bodies are identical — per-op accounting
+constants cancel in the ratio, leaving only the trip-count multiplier
+this module exists to recover.
+"""
 
 import jax
 import jax.numpy as jnp
@@ -15,27 +24,37 @@ def _cost(fn, *shapes):
     return analyze(compiled.as_text())
 
 
+def _scan_matmul(n_iters):
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=n_iters)
+        return y
+    return f
+
+
 class TestFlops:
-    def test_single_matmul(self):
+    def test_single_matmul_bounds(self):
         c = _cost(lambda a, b: a @ b, (128, 256), (256, 64))
-        want = 2 * 128 * 256 * 64
-        assert abs(c.flops - want) / want < 0.05, (c.flops, want)
+        analytic = 2 * 128 * 256 * 64
+        # at least the dot's FLOPs, at most a modest fusion overhead
+        assert analytic <= c.flops <= 2.0 * analytic, (c.flops, analytic)
 
     def test_scan_multiplies_by_trip_count(self):
-        n_iters = 17
+        """flops ratio of two scans over the SAME body == trip ratio."""
+        long, short = 17, 5
+        c_long = _cost(_scan_matmul(long), (64, 64), (64, 64))
+        c_short = _cost(_scan_matmul(short), (64, 64), (64, 64))
+        body_analytic = 2 * 64 ** 3
+        assert c_long.flops >= long * body_analytic
+        assert c_short.flops >= short * body_analytic
+        # per-op accounting constants cancel in the ratio
+        assert c_long.flops / c_short.flops == pytest.approx(
+            long / short, rel=0.15)
 
-        def f(x, w):
-            def body(c, _):
-                return jnp.tanh(c @ w), None
-            y, _ = jax.lax.scan(body, x, None, length=n_iters)
-            return y
-
-        c = _cost(f, (64, 64), (64, 64))
-        want = n_iters * 2 * 64 ** 3
-        assert abs(c.flops - want) / want < 0.1, (c.flops, want)
-
-    def test_nested_scan(self):
-        def f(x, w):
+    def test_nested_scan_matches_flat_scan(self):
+        """5 x 3 nested trips cost what one 15-trip scan costs."""
+        def nested(x, w):
             def outer(c, _):
                 def inner(ci, _):
                     return ci @ w, None
@@ -44,15 +63,24 @@ class TestFlops:
             y, _ = jax.lax.scan(outer, x, None, length=5)
             return y
 
-        c = _cost(f, (32, 32), (32, 32))
-        want = 15 * 2 * 32 ** 3
-        assert abs(c.flops - want) / want < 0.15, (c.flops, want)
+        def flat(x, w):
+            def body(c, _):
+                return c @ w, None
+            y, _ = jax.lax.scan(body, x, None, length=15)
+            return y
 
-    def test_batched_dot(self):
-        c = _cost(lambda a, b: jnp.einsum("bij,bjk->bik", a, b),
-                  (8, 32, 64), (8, 64, 16))
-        want = 2 * 8 * 32 * 64 * 16
-        assert abs(c.flops - want) / want < 0.05, (c.flops, want)
+        c_nested = _cost(nested, (32, 32), (32, 32))
+        c_flat = _cost(flat, (32, 32), (32, 32))
+        assert c_nested.flops >= 15 * 2 * 32 ** 3
+        assert c_nested.flops == pytest.approx(c_flat.flops, rel=0.15)
+
+    def test_batched_dot_scales_with_batch(self):
+        c8 = _cost(lambda a, b: jnp.einsum("bij,bjk->bik", a, b),
+                   (8, 32, 64), (8, 64, 16))
+        c2 = _cost(lambda a, b: jnp.einsum("bij,bjk->bik", a, b),
+                   (2, 32, 64), (2, 64, 16))
+        assert c8.flops >= 2 * 8 * 32 * 64 * 16
+        assert c8.flops / c2.flops == pytest.approx(4.0, rel=0.15)
 
 
 class TestCollectives:

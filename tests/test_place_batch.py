@@ -1,0 +1,332 @@
+"""Batched greedy placement engine tests.
+
+Covers the four contracts of ``repro.core.place_batch``:
+
+  * hypothesis property suite — on random ragged instance grids (mixed
+    n, T, D, m) with random feasible mappings, ``place_many`` equals a
+    looped ``two_phase`` exactly (same node purchases, same ``assign``,
+    same cost) for all four {fit} x {filling} combos, and ``verify``
+    holds on every batched solution;
+  * kernel oracle sweep — ``fit_scores_many`` vs its numpy/jnp
+    reference across shapes, padded-dim masks, span edges (s == e,
+    full-timeline tasks) and interpret-mode CPU execution, mirroring
+    the ``congestion_many_pallas`` oracle tests;
+  * protocol parity — ``evaluate_many(placement='batched')`` produces
+    the same costs as the per-instance placement loop;
+  * the acceptance gate — identical placements on a ragged B>=16 grid,
+    and the similarity-fit (dot-product/best-fit) placement phase of a
+    cold fleet sweep runs >=3x faster than the per-instance loop.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+try:  # the property suite needs the 'test' extra; the rest runs without
+    from hypothesis import given, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (  # noqa: E402
+    evaluate_many,
+    pack_problems,
+    penalty_map,
+    place_many,
+    solve_lp_many,
+    trim_timeline,
+    two_phase,
+    verify,
+)
+from repro.core.placement import FIT_POLICIES  # noqa: E402
+from repro.kernels import ops, ref  # noqa: E402
+from repro.kernels.fit import fit_scores_many_pallas  # noqa: E402
+from repro.workload import SyntheticSpec, synthetic_batch, \
+    synthetic_instance  # noqa: E402
+
+RNG = np.random.default_rng(11)
+
+ALL_COMBOS = [(fit, filling) for fit in FIT_POLICIES
+              for filling in (False, True)]
+
+
+def _ragged_problems(extra=()):
+    """Mixed (n, m, D, T) instances — the ragged-batch fixture."""
+    shapes = [(50, 3, 2, 12), (80, 5, 4, 24), (30, 2, 3, 8),
+              (120, 6, 5, 30), (64, 4, 2, 16), (25, 3, 3, 10),
+              *extra]
+    return [synthetic_instance(SyntheticSpec(n=n, m=m, D=D, T=T, seed=s))
+            for s, (n, m, D, T) in enumerate(shapes)]
+
+
+def _assert_equal_solutions(got, want):
+    np.testing.assert_array_equal(got.node_type, want.node_type)
+    np.testing.assert_array_equal(got.assign, want.assign)
+
+
+def _random_grid(seed):
+    """A small ragged batch of instances plus random feasible mappings."""
+    rng = np.random.default_rng(seed)
+    problems, mappings = [], []
+    for _ in range(int(rng.integers(2, 6))):
+        n = int(rng.integers(1, 35))
+        m = int(rng.integers(1, 5))
+        D = int(rng.integers(1, 4))
+        T = int(rng.integers(1, 14))
+        spec = SyntheticSpec(n=n, m=m, D=D, T=T,
+                             seed=int(rng.integers(0, 2**31 - 1)))
+        p = synthetic_instance(spec)
+        t, _ = trim_timeline(p)
+        problems.append(t)
+        # a random feasible node-type per task (demands in Table-I
+        # ranges fit every type, but pick via the feasibility mask to
+        # stay honest on degenerate draws)
+        from repro.core.problem import feasible_types
+
+        feas = feasible_types(t)
+        pick = np.array([rng.choice(np.flatnonzero(row)) for row in feas])
+        mappings.append(pick.astype(np.int64))
+    return problems, mappings
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                    reason="install the 'test' extra")
+class TestPlaceManyProperty:
+    if HAVE_HYPOTHESIS:
+        # example budget comes from the active profile (conftest.py)
+        @given(st.integers(0, 2**31 - 1))
+        def test_matches_looped_two_phase_exactly(self, seed):
+            problems, mappings = _random_grid(seed)
+            batch = pack_problems(problems)
+            for fit, filling in ALL_COMBOS:
+                sols = place_many(batch, mappings, fit=fit,
+                                  filling=filling)
+                for t, mp, got in zip(batch.problems, mappings, sols):
+                    want = two_phase(t, mp, fit=fit, filling=filling)
+                    _assert_equal_solutions(got, want)
+                    assert got.cost(t) == want.cost(t)
+                    verify(t, got)
+
+
+class TestPlaceManyFixtures:
+    def test_ragged_grid_all_combos_and_mappings(self):
+        """B>=16 ragged grid: every combo x {penalty-avg, penalty-max,
+        LP} mapping family is bit-identical to the loop."""
+        problems = _ragged_problems(
+            extra=[(40 + 7 * i, 2 + i % 4, 1 + i % 5, 6 + i)
+                   for i in range(12)])
+        assert len(problems) >= 16
+        batch = pack_problems(problems)
+        mapsets = [[penalty_map(t, kind) for t in batch.problems]
+                   for kind in ("avg", "max")]
+        mapsets.append([r.mapping for r in
+                        solve_lp_many(batch, iters=150)])
+        for maps in mapsets:
+            for fit, filling in ALL_COMBOS:
+                sols = place_many(batch, maps, fit=fit, filling=filling)
+                for t, mp, got in zip(batch.problems, maps, sols):
+                    want = two_phase(t, mp, fit=fit, filling=filling)
+                    _assert_equal_solutions(got, want)
+                    verify(t, got)
+
+    def test_mapping_validation(self):
+        t, _ = trim_timeline(synthetic_instance(SyntheticSpec(
+            n=10, m=2, D=2, T=6, seed=0)))
+        with pytest.raises(ValueError):
+            place_many([t], [np.zeros(t.n, np.int64)], fit="worst")
+        with pytest.raises(ValueError):
+            place_many([t], [])
+
+    def test_infeasible_mapping_raises(self):
+        """A mapping that sends a task to a type it cannot fit raises
+        exactly like two_phase."""
+        from repro.core import NodeTypes, Problem
+
+        t = Problem(dem=np.array([[0.9], [0.4]]),
+                    start=np.array([0, 0]), end=np.array([1, 1]),
+                    node_types=NodeTypes(cap=np.array([[1.0], [0.5]]),
+                                         cost=np.array([1.0, 0.4])),
+                    T=2)
+        bad = np.array([1, 1])  # task 0 (0.9) cannot fit type 1 (0.5)
+        with pytest.raises(RuntimeError):
+            two_phase(t, bad)
+        with pytest.raises(RuntimeError):
+            place_many([t], [bad])
+
+    @pytest.mark.slow
+    def test_kernel_backend_parity(self):
+        """backend='kernel' (fp32 Pallas scoring, interpret on CPU)
+        places identically to the numpy loop."""
+        problems = [synthetic_instance(SyntheticSpec(n=n, m=m, D=D, T=T,
+                                                     seed=s))
+                    for s, (n, m, D, T) in enumerate(
+                        [(25, 3, 2, 10), (30, 2, 3, 8), (20, 4, 2, 12)])]
+        batch = pack_problems(problems)
+        maps = [penalty_map(t, "avg") for t in batch.problems]
+        for fit, filling in ALL_COMBOS:
+            sols = place_many(batch, maps, fit=fit, filling=filling,
+                              backend="kernel")
+            for t, mp, got in zip(batch.problems, maps, sols):
+                want = two_phase(t, mp, fit=fit, filling=filling)
+                _assert_equal_solutions(got, want)
+
+
+class TestFitScoresManyKernel:
+    """Oracle sweep for the batch-dim-aware Pallas fit kernel, mirroring
+    the congestion_many_pallas tests (interpret-mode CPU execution)."""
+
+    @pytest.mark.parametrize("B,N,T,D", [
+        (1, 1, 1, 1),
+        (3, 7, 24, 2),       # sub-block everything
+        (2, 16, 40, 5),
+        (4, 30, 13, 3),
+        (2, 130, 20, 2),     # over the 128-lane node block edge
+    ])
+    def test_matches_ref(self, B, N, T, D):
+        rem = RNG.random((B, N, T, D)).astype(np.float32)
+        dem = (RNG.random((B, D)) * 0.2).astype(np.float32)
+        inv = (1.0 / (0.5 + RNG.random((B, D)))).astype(np.float32)
+        s = RNG.integers(0, T, B)
+        e = np.array([RNG.integers(lo, T) for lo in s])
+        fk, ck = ops.fit_scores_many(rem, dem, s, e, inv, scored=True)
+        fr, cr = ops.fit_scores_many(rem, dem, s, e, inv, scored=True,
+                                     use_ref=True)
+        np.testing.assert_array_equal(fk, fr)
+        np.testing.assert_allclose(ck, cr, rtol=1e-4, atol=1e-5)
+
+    def test_span_edges(self):
+        """Point spans (s == e) and full-timeline tasks."""
+        B, N, T, D = 3, 9, 12, 3
+        rem = RNG.random((B, N, T, D)).astype(np.float32)
+        dem = (RNG.random((B, D)) * 0.2).astype(np.float32)
+        inv = np.ones((B, D), np.float32)
+        for s, e in [(np.array([0, 5, T - 1]), np.array([0, 5, T - 1])),
+                     (np.zeros(B, int), np.full(B, T - 1))]:
+            fk, ck = ops.fit_scores_many(rem, dem, s, e, inv, scored=True)
+            fr, cr = ops.fit_scores_many(rem, dem, s, e, inv,
+                                         scored=True, use_ref=True)
+            np.testing.assert_array_equal(fk, fr)
+            np.testing.assert_allclose(ck, cr, rtol=1e-4, atol=1e-5)
+
+    def test_padded_dims_are_neutral(self):
+        """inv_cap=0 marks padded dims: they contribute nothing to the
+        similarity reductions, and zero demand there keeps feasibility
+        neutral — exactly the engine's padding contract."""
+        B, N, T = 2, 6, 10
+        rem3 = RNG.random((B, N, T, 3)).astype(np.float32)
+        rem4 = np.concatenate(
+            [rem3, np.ones((B, N, T, 1), np.float32)], axis=3)
+        dem3 = (RNG.random((B, 3)) * 0.2).astype(np.float32)
+        dem4 = np.concatenate([dem3, np.zeros((B, 1), np.float32)], 1)
+        inv3 = np.ones((B, 3), np.float32)
+        inv4 = np.concatenate([inv3, np.zeros((B, 1), np.float32)], 1)
+        s = np.array([2, 0])
+        e = np.array([7, T - 1])
+        f3, c3 = ops.fit_scores_many(rem3, dem3, s, e, inv3, scored=True)
+        f4, c4 = ops.fit_scores_many(rem4, dem4, s, e, inv4, scored=True)
+        np.testing.assert_array_equal(f3, f4)
+        np.testing.assert_allclose(c3, c4, rtol=1e-5, atol=1e-6)
+
+    def test_instances_are_independent(self):
+        """Each grid-over-B group must see only its own instance."""
+        N, T, D = 8, 14, 2
+        rem = RNG.random((1, N, T, D)).astype(np.float32)
+        dem = (RNG.random((1, D)) * 0.3).astype(np.float32)
+        inv = np.ones((1, D), np.float32)
+        s, e = np.array([3]), np.array([9])
+        alone_f, alone_c = ops.fit_scores_many(rem, dem, s, e, inv,
+                                               scored=True)
+        rem3 = np.concatenate([rem * 0.5, rem, rem + 1], 0)
+        dem3 = np.concatenate([dem * 2, dem, dem * 0.1], 0)
+        inv3 = np.concatenate([inv, inv, inv * 0.7], 0)
+        s3 = np.array([0, 3, 5])
+        e3 = np.array([T - 1, 9, 6])
+        f3, c3 = ops.fit_scores_many(rem3, dem3, s3, e3, inv3,
+                                     scored=True)
+        np.testing.assert_array_equal(f3[1], alone_f[0])
+        np.testing.assert_allclose(c3[1], alone_c[0], rtol=1e-6,
+                                   atol=1e-6)
+
+    def test_small_block_sizes(self):
+        """Multi-step grids with tiny blocks, raw kernel vs raw oracle."""
+        B, N, T, D = 3, 20, 40, 3
+        rem = RNG.random((B, N, T, D)).astype(np.float32)
+        dem = (RNG.random((B, D)) * 0.1).astype(np.float32)
+        inv = np.ones((B, D), np.float32)
+        mask = np.zeros((B, T), np.float32)
+        mask[0, 5:30] = 1.0
+        mask[1, 0:1] = 1.0
+        mask[2, :] = 1.0
+        got = fit_scores_many_pallas(
+            np.ascontiguousarray(rem.transpose(0, 2, 3, 1)), dem, mask,
+            inv, block_n=8, block_t=8, interpret=True)
+        want = ref.fit_scores_many_ref(rem, dem, mask, inv)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-4, atol=1e-5)
+
+
+class TestEvaluateManyPlacement:
+    def test_batched_placement_matches_loop(self):
+        problems = _ragged_problems()[:4]
+        got = evaluate_many(problems, lp_iters=250)
+        want = evaluate_many(problems, lp_iters=250, placement="loop")
+        for g, w in zip(got, want):
+            assert g["costs"] == w["costs"]
+            assert g["lb"] == w["lb"]
+            for a in g["normalized"]:
+                assert g["normalized"][a] == pytest.approx(
+                    w["normalized"][a], rel=1e-12)
+            assert set(g["wall_s"]) == set(w["wall_s"])
+
+    def test_rejects_unknown_placement(self):
+        with pytest.raises(ValueError):
+            evaluate_many(_ragged_problems()[:1], placement="bogus")
+
+
+class TestPlacementAcceptance:
+    """The acceptance gate, analogous to PR 1's LP speedup smoke: on a
+    seed-replicated fleet grid the lockstep engine must place exactly
+    like the loop, and the similarity-fit scoring phase (the engine's
+    dot-product/best-fit hot loop) must run >=3x faster cold.
+    """
+
+    def _fleet(self):
+        specs = [SyntheticSpec(n=28 + 4 * i, m=3, D=4, T=10, seed=s)
+                 for i in range(4) for s in range(64)]
+        problems = [trim_timeline(p)[0] for p in synthetic_batch(specs)]
+        batch = pack_problems(problems)
+        maps = [penalty_map(t, "avg") for t in batch.problems]
+        return batch, maps
+
+    def _ratio(self, batch, maps, rounds=3):
+        t_loop = t_batch = float("inf")
+        for _ in range(rounds):  # interleaved: both sides share load
+            t0 = time.perf_counter()
+            looped = [two_phase(t, mp, fit="similarity")
+                      for t, mp in zip(batch.problems, maps)]
+            t_loop = min(t_loop, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            sols = place_many(batch, maps, fit="similarity")
+            t_batch = min(t_batch, time.perf_counter() - t0)
+        for got, want in zip(sols, looped):
+            _assert_equal_solutions(got, want)
+        return t_loop / max(t_batch, 1e-9)
+
+    def test_identical_and_similarity_phase_3x(self):
+        batch, maps = self._fleet()
+        # all four combos place identically on the fleet grid
+        for fit, filling in ALL_COMBOS:
+            sols = place_many(batch, maps, fit=fit, filling=filling)
+            spot = list(range(0, batch.B, 16))  # full loop is the slow
+            # comparator; spot-check here, timing below re-checks all
+            for b in spot:
+                want = two_phase(batch.problems[b], maps[b], fit=fit,
+                                 filling=filling)
+                _assert_equal_solutions(sols[b], want)
+        ratio = self._ratio(batch, maps)
+        if ratio < 3.0:  # one retry: CI boxes share noisy cores
+            ratio = max(ratio, self._ratio(batch, maps))
+        assert ratio >= 3.0, (
+            f"similarity placement phase speedup {ratio:.1f}x < 3x")
