@@ -1,0 +1,129 @@
+"""Convergence-regression gate for the adaptive PDHG engine.
+
+    python -m benchmarks.check_convergence results/ci/solver_stats.json \
+        results/golden/solver_stats.json [--max-iter-regression 0.25]
+
+Compares the current smoke-sweep solver telemetry (written by
+``benchmarks.run --only fleet_sweep``) against the committed baseline:
+
+  * median iterations-to-tolerance of the warm-started production path
+    must not regress by more than ``--max-iter-regression`` (default
+    25%, per-PR noise floor for the deterministic iteration counts);
+  * final KKT residuals must stay within tolerance (every lane
+    converged) and the median must not double vs the baseline;
+  * the warm-started path must keep its >=2x total-iteration reduction
+    over fixed-step vanilla PDHG;
+  * protocol-cost parity with vanilla must hold: certified LP
+    objectives within the provable tol slack on every instance, and
+    total protocol cost within ``--max-cost-drift`` percent (per-
+    instance drift is two-sided rounding noise on degenerate
+    instances — epsilon-optimal vertices round differently — so parity
+    is pinned in aggregate).
+
+Exit code 0 on pass, 1 on regression — wired as a CI step right after
+the benchmark smoke run.  Regenerate the baseline intentionally with:
+``python -m benchmarks.run --scale quick --only fleet_sweep --out
+results/golden_tmp && cp results/golden_tmp/solver_stats.json
+results/golden/solver_stats.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(cur: dict, base: dict, max_iter_regression: float,
+          max_kkt_factor: float, min_reduction: float,
+          max_cost_drift: float = 1.0) -> list[str]:
+    """Returns the list of regression messages (empty == gate passes)."""
+    errs = []
+    cw, bw = cur["warm"], base["warm"]
+    # iteration counts quantize to the convergence-check interval, so a
+    # fractional budget alone would flag a single one-quantum shift
+    # (e.g. median 75 -> 100 is +33%): grant one quantum of slack on
+    # the per-instance median, and apply the fractional budget to the
+    # finer-grained total as well
+    quantum = cur.get("check_every", 0)
+    limit = bw["median_iters"] * (1.0 + max_iter_regression) + quantum
+    if cw["median_iters"] > limit:
+        errs.append(
+            f"median iterations-to-tolerance regressed: "
+            f"{cw['median_iters']} > {limit:.1f} "
+            f"(baseline {bw['median_iters']} +{max_iter_regression:.0%} "
+            f"+ {quantum} check-interval slack)")
+    t_limit = bw["total_iters"] * (1.0 + max_iter_regression) + quantum
+    if cw["total_iters"] > t_limit:
+        errs.append(
+            f"total iterations-to-tolerance regressed: "
+            f"{cw['total_iters']} > {t_limit:.0f} "
+            f"(baseline {bw['total_iters']} +{max_iter_regression:.0%})")
+    if cw["converged_frac"] < base["warm"]["converged_frac"]:
+        errs.append(
+            f"converged fraction dropped: {cw['converged_frac']:.3f} < "
+            f"baseline {bw['converged_frac']:.3f}")
+    if cw["max_kkt"] > cur["tol"]:
+        errs.append(
+            f"final KKT residual above tolerance: max_kkt "
+            f"{cw['max_kkt']:.2e} > tol {cur['tol']:.2e}")
+    if cw["median_kkt"] > bw["median_kkt"] * max_kkt_factor:
+        errs.append(
+            f"median KKT residual regressed: {cw['median_kkt']:.2e} > "
+            f"{max_kkt_factor}x baseline {bw['median_kkt']:.2e}")
+    if cur["iter_reduction_vs_vanilla"] < min_reduction:
+        errs.append(
+            f"warm-started sweep lost its iteration advantage: "
+            f"{cur['iter_reduction_vs_vanilla']}x < {min_reduction}x "
+            f"over fixed-step vanilla")
+    if not cur.get("lp_obj_within_slack", False):
+        errs.append("certified LP objectives drifted beyond the "
+                    "provable tolerance slack vs fixed-step vanilla")
+    if abs(cur["cost_drift_pct"]) > max_cost_drift:
+        errs.append(
+            f"total protocol cost drifted {cur['cost_drift_pct']:+.3f}% "
+            f"vs vanilla (budget +/-{max_cost_drift}%)")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="solver_stats.json from this run")
+    ap.add_argument("baseline", help="committed baseline solver_stats.json")
+    ap.add_argument("--max-iter-regression", type=float, default=0.25,
+                    help="allowed fractional increase of median "
+                         "iterations-to-tolerance (default 0.25)")
+    ap.add_argument("--max-kkt-factor", type=float, default=2.0,
+                    help="allowed factor on the median final KKT "
+                         "residual (default 2.0)")
+    ap.add_argument("--min-reduction", type=float, default=2.0,
+                    help="required total-iteration reduction of the "
+                         "warm-started sweep vs vanilla (default 2.0)")
+    ap.add_argument("--max-cost-drift", type=float, default=1.0,
+                    help="allowed total protocol-cost drift vs vanilla, "
+                         "in percent (default 1.0)")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    errs = check(cur, base, args.max_iter_regression, args.max_kkt_factor,
+                 args.min_reduction, args.max_cost_drift)
+    print(f"convergence gate: current warm median_iters="
+          f"{cur['warm']['median_iters']} (baseline "
+          f"{base['warm']['median_iters']}), reduction vs vanilla="
+          f"{cur['iter_reduction_vs_vanilla']}x, max_kkt="
+          f"{cur['warm']['max_kkt']:.2e}, tol={cur['tol']:.0e}, "
+          f"cost drift={cur['cost_drift_pct']:+.3f}%")
+    if errs:
+        for e in errs:
+            print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    print("convergence gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,16 +27,32 @@ from repro.workload import SyntheticSpec, gct_like_instance, \
 ALGOS = ("penalty-map", "penalty-map-f", "lp-map", "lp-map-f")
 
 
-def _scale_params(scale: str):
+def _scale_params(scale: str, lp_tol=None, lp_max_iters=None):
+    """Per-scale knobs.  ``lp_iters`` is the legacy fixed iteration count
+    (still used by the fixed-step timing comparisons); the LP phase of
+    every sweep table now stops on ``lp_tol`` (normalized duality gap)
+    with ``lp_max_iters`` as the worst-case cap — both overridable from
+    ``run.py --lp-tol / --lp-max-iters``."""
+    from repro.core.batch import DEFAULT_TOL
+
     if scale == "quick":
-        return {"n": 200, "n_sweep": (100, 200, 400), "seeds": 2,
-                "m": 6, "gct_n": 300, "max_slots": 200, "lp_iters": 1000}
-    if scale == "default":
+        sp = {"n": 200, "n_sweep": (100, 200, 400), "seeds": 2,
+              "m": 6, "gct_n": 300, "max_slots": 200, "lp_iters": 1000,
+              "lp_tol": DEFAULT_TOL, "lp_max_iters": 4000}
+    elif scale == "default":
         # paper-shaped but sized for a single CPU core (~20 min total)
-        return {"n": 500, "n_sweep": (500, 1000), "seeds": 2,
-                "m": 10, "gct_n": 500, "max_slots": 300, "lp_iters": 1500}
-    return {"n": 1000, "n_sweep": (500, 1000, 1500, 2000), "seeds": 5,
-            "m": 10, "gct_n": 1000, "max_slots": 400, "lp_iters": 2000}
+        sp = {"n": 500, "n_sweep": (500, 1000), "seeds": 2,
+              "m": 10, "gct_n": 500, "max_slots": 300, "lp_iters": 1500,
+              "lp_tol": DEFAULT_TOL, "lp_max_iters": 6000}
+    else:
+        sp = {"n": 1000, "n_sweep": (500, 1000, 1500, 2000), "seeds": 5,
+              "m": 10, "gct_n": 1000, "max_slots": 400, "lp_iters": 2000,
+              "lp_tol": DEFAULT_TOL, "lp_max_iters": 8000}
+    if lp_tol is not None:
+        sp["lp_tol"] = lp_tol
+    if lp_max_iters is not None:
+        sp["lp_max_iters"] = lp_max_iters
+    return sp
 
 
 def _highs_entry(p, max_slots):
@@ -62,17 +78,24 @@ def _sweep_eval(groups, sp, lp="pdhg", max_slots=None,
                 placement="batched"):
     """Run the §VI protocol over a whole sweep grid.
 
-    ``groups[g]`` holds one sweep point's seed-replicated instances.  With
-    ``lp='pdhg'`` the entire flattened grid goes through ONE batched LP
-    solve and (with ``placement='batched'``) ONE lockstep placement per
-    protocol combo (``evaluate_many``); ``lp='highs'`` reproduces the
-    per-instance exact-LP loop (``max_slots`` caps its constraint rows at
-    GCT scale).  Returns one seed-averaged dict per group with the
-    normalized cost per algorithm, 'lb', and per-algo 'wall_s'.
+    ``groups[g]`` holds one sweep point's seed-replicated instances, in
+    grid-adjacent (``sweep_specs``) order.  With ``lp='pdhg'`` the LP
+    phase runs the adaptive restarted engine to ``sp['lp_tol']`` as a
+    warm-started chain over the sweep — each group seeds from its
+    neighbor's primal/dual solution — and (with ``placement='batched'``)
+    ONE lockstep placement per protocol combo (``evaluate_many``);
+    ``lp='highs'`` reproduces the per-instance exact-LP loop
+    (``max_slots`` caps its constraint rows at GCT scale).  Returns one
+    seed-averaged dict per group with the normalized cost per algorithm,
+    'lb', and per-algo 'wall_s'.
     """
     flat = [p for g in groups for p in g]
     if lp == "pdhg":
-        entries = evaluate_many(flat, algos=ALGOS, lp_iters=sp["lp_iters"],
+        sizes = {len(g) for g in groups}
+        warm = sizes.pop() if len(sizes) == 1 and len(groups) > 1 else 0
+        entries = evaluate_many(flat, algos=ALGOS,
+                                lp_iters=sp["lp_max_iters"],
+                                lp_tol=sp["lp_tol"], warm_start=warm,
                                 placement=placement)
     else:
         entries = [_highs_entry(p, max_slots) for p in flat]
@@ -115,24 +138,27 @@ def _gct_table(figure, axis_name, axis_vals, mk, sp, lp,
 
 
 # ---------------------------------------------------------------- Fig 7a
-def fig7a(scale="paper", lp="pdhg", placement="batched"):
-    sp = _scale_params(scale)
+def fig7a(scale="paper", lp="pdhg", placement="batched",
+          lp_tol=None, lp_max_iters=None):
+    sp = _scale_params(scale, lp_tol, lp_max_iters)
     return _spec_table("7a", "D", (2, 5, 7),
                        SyntheticSpec(n=sp["n"], m=sp["m"]), sp, lp,
                        placement=placement)
 
 
 # ---------------------------------------------------------------- Fig 7b
-def fig7b(scale="paper", lp="pdhg", placement="batched"):
-    sp = _scale_params(scale)
+def fig7b(scale="paper", lp="pdhg", placement="batched",
+          lp_tol=None, lp_max_iters=None):
+    sp = _scale_params(scale, lp_tol, lp_max_iters)
     return _spec_table("7b", "m", (5, 10, 15),
                        SyntheticSpec(n=sp["n"], D=5), sp, lp,
                        placement=placement)
 
 
 # ---------------------------------------------------------------- Fig 7c
-def fig7c(scale="paper", lp="pdhg", placement="batched"):
-    sp = _scale_params(scale)
+def fig7c(scale="paper", lp="pdhg", placement="batched",
+          lp_tol=None, lp_max_iters=None):
+    sp = _scale_params(scale, lp_tol, lp_max_iters)
     rows = _spec_table("7c", "demand_hi", ((0.01, 0.05), (0.01, 0.1),
                                            (0.01, 0.2)),
                        SyntheticSpec(n=sp["n"], m=sp["m"], D=5), sp, lp,
@@ -143,8 +169,9 @@ def fig7c(scale="paper", lp="pdhg", placement="batched"):
 
 
 # ---------------------------------------------------------------- Fig 8a
-def fig8a(scale="paper", lp="pdhg", placement="batched"):
-    sp = _scale_params(scale)
+def fig8a(scale="paper", lp="pdhg", placement="batched",
+          lp_tol=None, lp_max_iters=None):
+    sp = _scale_params(scale, lp_tol, lp_max_iters)
     return _gct_table(
         "8a", "n", sp["n_sweep"],
         lambda n, s: gct_like_instance(n=n, m=sp["m"], seed=s), sp, lp,
@@ -152,8 +179,9 @@ def fig8a(scale="paper", lp="pdhg", placement="batched"):
 
 
 # ---------------------------------------------------------------- Fig 8b
-def fig8b(scale="paper", lp="pdhg", placement="batched"):
-    sp = _scale_params(scale)
+def fig8b(scale="paper", lp="pdhg", placement="batched",
+          lp_tol=None, lp_max_iters=None):
+    sp = _scale_params(scale, lp_tol, lp_max_iters)
     return _gct_table(
         "8b", "m", (4, 7, 10, 13),
         lambda m, s: gct_like_instance(n=sp["gct_n"], m=m, seed=s), sp, lp,
@@ -161,8 +189,9 @@ def fig8b(scale="paper", lp="pdhg", placement="batched"):
 
 
 # ---------------------------------------------------------------- Fig 9
-def fig9(scale="paper", lp="pdhg", placement="batched"):
-    sp = _scale_params(scale)
+def fig9(scale="paper", lp="pdhg", placement="batched",
+          lp_tol=None, lp_max_iters=None):
+    sp = _scale_params(scale, lp_tol, lp_max_iters)
     return _spec_table("9", "e", (0.33, 1.0, 2.0, 3.0),
                        SyntheticSpec(n=sp["n"], m=sp["m"], D=5,
                                      cost_model="heterogeneous"), sp, lp,
@@ -170,8 +199,9 @@ def fig9(scale="paper", lp="pdhg", placement="batched"):
 
 
 # ---------------------------------------------------------------- Fig 10
-def fig10(scale="paper", lp="pdhg", placement="batched"):
-    sp = _scale_params(scale)
+def fig10(scale="paper", lp="pdhg", placement="batched",
+          lp_tol=None, lp_max_iters=None):
+    sp = _scale_params(scale, lp_tol, lp_max_iters)
     return _gct_table(
         "10", "m", (4, 7, 10, 13),
         lambda m, s: gct_like_instance(n=sp["gct_n"], m=m, seed=s,
@@ -180,9 +210,10 @@ def fig10(scale="paper", lp="pdhg", placement="batched"):
 
 
 # ---------------------------------------------------------------- Fig 11
-def fig11(scale="paper", lp="pdhg", placement="batched"):
+def fig11(scale="paper", lp="pdhg", placement="batched",
+          lp_tol=None, lp_max_iters=None):
     """PenaltyMap-F vs LP-map-F across the GCT scenarios."""
-    sp = _scale_params(scale)
+    sp = _scale_params(scale, lp_tol, lp_max_iters)
     scenarios = [("hom", dict(cost_model="homogeneous")),
                  ("gce", dict(cost_model="gce"))]
     points = [(tag, m, kw) for tag, kw in scenarios for m in (4, 10, 13)]
@@ -200,7 +231,8 @@ def fig11(scale="paper", lp="pdhg", placement="batched"):
 
 
 # ------------------------------------------------------------ §VI-E time
-def runtime(scale="paper", lp="pdhg", placement="batched"):
+def runtime(scale="paper", lp="pdhg", placement="batched",
+          lp_tol=None, lp_max_iters=None):
     """Paper: PenaltyMap ~1s; LP solve ~15min (CBC) at n=2000, m=13;
     mapping+placement ~1s.  We report HiGHS numbers."""
     n = {"paper": 2000, "default": 1000}.get(scale, 400)
@@ -224,10 +256,11 @@ def runtime(scale="paper", lp="pdhg", placement="batched"):
 
 
 # ------------------------------------------------------------ §VI-F
-def no_timeline(scale="paper", lp="pdhg", placement="batched"):
+def no_timeline(scale="paper", lp="pdhg", placement="batched",
+          lp_tol=None, lp_max_iters=None):
     """Timeline-aware LP-map-F cost vs the timeline-agnostic lower bound:
     the paper reports ~2x average."""
-    sp = _scale_params(scale)
+    sp = _scale_params(scale, lp_tol, lp_max_iters)
     factors = []
     for s in range(sp["seeds"]):
         g = gct_like_instance(n=sp["gct_n"], m=10, seed=s)
@@ -242,8 +275,9 @@ def no_timeline(scale="paper", lp="pdhg", placement="batched"):
 
 
 # ------------------------------------------------------------ Fig 5
-def near_integrality(scale="paper", lp="pdhg", placement="batched"):
-    sp = _scale_params(scale)
+def near_integrality(scale="paper", lp="pdhg", placement="batched",
+          lp_tol=None, lp_max_iters=None):
+    sp = _scale_params(scale, lp_tol, lp_max_iters)
     p = synthetic_instance(SyntheticSpec(n=500 if scale == "paper" else 150,
                                          m=10, D=5, seed=0))
     t, _ = trim_timeline(p)
@@ -257,7 +291,8 @@ def near_integrality(scale="paper", lp="pdhg", placement="batched"):
 
 
 # ---------------------------------------------------- beyond-paper tables
-def scaling_beyond(scale="default", lp="pdhg", placement="batched"):
+def scaling_beyond(scale="default", lp="pdhg", placement="batched",
+                   lp_tol=None, lp_max_iters=None):
     """HiGHS (exact) vs JAX PDHG (matrix-free, O(n+T)/iter) as n grows —
     the accelerator-native solve path's quality/latency trade."""
     from repro.core import solve_lp_pdhg
@@ -286,10 +321,11 @@ def scaling_beyond(scale="default", lp="pdhg", placement="batched"):
     return rows
 
 
-def local_search_beyond(scale="default", lp="pdhg", placement="batched"):
+def local_search_beyond(scale="default", lp="pdhg", placement="batched",
+                   lp_tol=None, lp_max_iters=None):
     """Node-elimination post-pass on LP-map-F (the consistent beyond-paper
     cost reduction)."""
-    sp = _scale_params(scale)
+    sp = _scale_params(scale, lp_tol, lp_max_iters)
     rows = []
     for seed in range(sp["seeds"]):
         g = gct_like_instance(n=sp["gct_n"], m=10, seed=seed)
@@ -310,20 +346,32 @@ def local_search_beyond(scale="default", lp="pdhg", placement="batched"):
     return rows
 
 
-def fleet_sweep(scale="default", lp="pdhg", placement="batched"):
+def fleet_sweep(scale="default", lp="pdhg", placement="batched",
+                   lp_tol=None, lp_max_iters=None):
     """The batched engine's headline: LP + placement phases of a ragged
     Table-I-style sweep grid.  The LP phase runs as one fused padded
     solve vs the per-instance loop (which pays a fresh JIT compile per
     distinct instance shape); the placement phase then consumes the
     batched mappings either through the lockstep ``place_many`` engine
     or the per-instance ``two_phase`` loop, timing all four
-    {fit} x {filling} protocol combos."""
+    {fit} x {filling} protocol combos.
+
+    The solver-telemetry section then runs the same grid through the
+    tolerance-stopped engine three ways — fixed-step vanilla, adaptive+
+    restarted (cold), and adaptive+restarted warm-started along the
+    sweep — and reports iterations-to-tolerance, restarts, and final KKT
+    residuals (the ``_solver_stats`` blob ``run.py`` writes as
+    ``solver_stats.json``, which the CI convergence gate diffs against
+    ``results/golden/solver_stats.json``)."""
     import jax
 
     from repro.core import (pack_problems, place_many, solve_lp_many,
-                            solve_lp_pdhg, two_phase, FIT_POLICIES)
+                            solve_lp_pdhg, solve_lp_sweep, two_phase,
+                            FIT_POLICIES)
+    from repro.core.batch import DEFAULT_CHECK_EVERY
+    from repro.core.lp_pdhg import merge_stats
 
-    sp = _scale_params(scale)
+    sp = _scale_params(scale, lp_tol, lp_max_iters)
     shapes = {"quick": 8, "default": 12, "paper": 16}.get(scale, 12)
     # seed-replicated like the paper's sweeps: many instances per shape
     # (that is the fleet shape both batched phases amortize over)
@@ -365,6 +413,60 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched"):
         and np.array_equal(a.node_type, b.node_type)
         for many, loop in zip(placed_b, placed_l)
         for a, b in zip(many, loop))
+
+    # --- solver telemetry: vanilla vs adaptive vs warm-started sweep ---
+    tol, cap = sp["lp_tol"], sp["lp_max_iters"]
+    res_van, st_van = solve_lp_many(problems, iters=cap, tol=tol,
+                                    adaptive=False, restart=False,
+                                    full_output=True)
+    _, st_ada = solve_lp_many(problems, iters=cap, tol=tol,
+                              full_output=True)
+    groups = [problems[i * seeds : (i + 1) * seeds]
+              for i in range(shapes)]  # grid-adjacent sweep order
+    res_warm, stats_warm = solve_lp_sweep(groups, tol=tol, iters=cap)
+    van, ada = st_van.summary(), merge_stats([st_ada])
+    warm = merge_stats(stats_warm)
+
+    # protocol-cost parity at tol: the lp-map-f entry (best fit policy,
+    # with filling) from the vanilla vs the warm-started mappings,
+    # computed through the lockstep batched placement engine.  Both
+    # solves are epsilon-optimal, so their certified LP objectives agree
+    # within the provable tol slack; the *rounded* protocol cost of a
+    # degenerate instance can land on a different epsilon-optimal vertex
+    # either way, so per-instance drift is two-sided rounding noise and
+    # parity is pinned in aggregate (total drift) instead.
+    def _proto_costs(results):
+        per_fit = [place_many(batch, [r.mapping for r in results],
+                              fit=f, filling=True) for f in FIT_POLICIES]
+        return [min(sols[b].cost(t) for sols in per_fit)
+                for b, t in enumerate(batch.problems)]
+
+    cost_v = _proto_costs(res_van)
+    cost_w = _proto_costs(res_warm)
+    drift_pct = 100.0 * (sum(cost_w) - sum(cost_v)) / sum(cost_v)
+    drift_max_pct = 100.0 * max(
+        abs(w - v) / v for v, w in zip(cost_v, cost_w))
+    slack_ok = all(
+        abs(a.objective - b.objective)
+        <= tol * (2.0 + a.objective + a.lower_bound
+                  + b.objective + b.lower_bound)
+        for a, b in zip(res_van, res_warm))
+
+    solver_stats = {
+        "grid": {"B": len(problems), "shapes": shapes, "seeds": seeds,
+                 "scale": scale},
+        "tol": tol, "max_iters": cap,
+        # iteration counts quantize to the convergence-check interval;
+        # the regression gate grants one quantum of slack on top of the
+        # fractional budget
+        "check_every": DEFAULT_CHECK_EVERY,
+        "vanilla": van, "adaptive": ada, "warm": warm,
+        "iter_reduction_vs_vanilla": round(
+            van["total_iters"] / max(warm["total_iters"], 1), 2),
+        "lp_obj_within_slack": bool(slack_ok),
+        "cost_drift_pct": round(drift_pct, 3),
+        "cost_drift_max_pct": round(drift_max_pct, 2),
+    }
     return [{
         "figure": "fleet_sweep(beyond)", "B": len(problems),
         "distinct_shapes": shapes,
@@ -376,6 +478,22 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched"):
         "placement_speedup": round(
             t_place_l / max(t_place_b, 1e-9), 1),
         "placements_identical": place_agree,
+        # convergence telemetry (iterations are deterministic, unlike
+        # the wall-clock columns — these are what the CI gate pins)
+        "lp_tol": tol,
+        "vanilla_total_iters": van["total_iters"],
+        "adaptive_total_iters": ada["total_iters"],
+        "warm_total_iters": warm["total_iters"],
+        "iter_reduction_vs_vanilla": solver_stats[
+            "iter_reduction_vs_vanilla"],
+        "warm_median_iters": warm["median_iters"],
+        "warm_total_restarts": warm["total_restarts"],
+        "warm_max_kkt": round(warm["max_kkt"], 6),
+        "warm_converged_frac": warm["converged_frac"],
+        "lp_obj_within_slack": bool(slack_ok),
+        "cost_drift_pct": round(drift_pct, 3),
+        "cost_drift_max_pct": round(drift_max_pct, 2),
+        "_solver_stats": solver_stats,
     }]
 
 

@@ -3,15 +3,25 @@
     python -m benchmarks.run [--scale quick|paper] [--only fig8a,...]
                              [--lp pdhg|highs]
                              [--placement batched|loop]
+                             [--lp-tol 5e-3] [--lp-max-iters 4000]
                              [--out results/paper]
 
 Prints ``table,key=value,...`` CSV rows; writes JSON per table.  With the
 default ``--lp pdhg`` every sweep table funnels its whole instance grid
-through ONE batched LP solve (repro.core.batch), and with the default
-``--placement batched`` the greedy placement phase runs as one lockstep
-``place_many`` per protocol combo (repro.core.place_batch); ``--lp
-highs`` / ``--placement loop`` restore the paper's per-instance loops
-(placements and costs are identical).  Roofline rows (from dry-run
+through the adaptive restarted batched PDHG engine (repro.core.batch),
+stopped at the ``--lp-tol`` normalized duality gap (``--lp-max-iters``
+caps the worst case) and warm-started between grid-adjacent sweep
+points; ``--placement batched`` (default) runs the greedy placement
+phase as one lockstep ``place_many`` per protocol combo
+(repro.core.place_batch).  ``--lp highs`` / ``--placement loop`` restore
+the paper's per-instance loops (placements and costs are identical).
+
+The ``fleet_sweep`` table additionally emits solver convergence
+telemetry (iterations-to-tolerance, restarts, final KKT residuals for
+vanilla vs adaptive vs warm-started solves), written next to the timing
+output as ``<out>/solver_stats.json`` — the file the CI convergence-
+regression gate (benchmarks/check_convergence.py) diffs against
+``results/golden/solver_stats.json``.  Roofline rows (from dry-run
 artifacts, if present) are appended at the end.
 """
 
@@ -37,6 +47,14 @@ def main(argv=None) -> None:
                     help="greedy placement phase: lockstep batched "
                          "engine (place_many) or the per-instance "
                          "two_phase loop (identical placements)")
+    ap.add_argument("--lp-tol", type=float, default=None,
+                    help="normalized-duality-gap stopping tolerance of "
+                         "the PDHG LP phase (default: the scale's "
+                         "built-in tolerance, repro.core.batch."
+                         "DEFAULT_TOL)")
+    ap.add_argument("--lp-max-iters", type=int, default=None,
+                    help="worst-case PDHG iteration cap under --lp-tol "
+                         "(default: per-scale)")
     ap.add_argument("--only", default="")
     ap.add_argument("--out", default="results/paper")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
@@ -53,8 +71,19 @@ def main(argv=None) -> None:
         if only and name not in only:
             continue
         t0 = time.perf_counter()
-        rows = fn(scale=args.scale, lp=args.lp, placement=args.placement)
+        rows = fn(scale=args.scale, lp=args.lp, placement=args.placement,
+                  lp_tol=args.lp_tol, lp_max_iters=args.lp_max_iters)
         dt = time.perf_counter() - t0
+        # solver telemetry rides on the row as a private blob: write it
+        # as its own artifact next to the timing output
+        stats = [row.pop("_solver_stats") for row in rows
+                 if "_solver_stats" in row]
+        if stats:
+            path = os.path.join(args.out, "solver_stats.json")
+            with open(path, "w") as f:
+                json.dump(stats[0] if len(stats) == 1 else stats, f,
+                          indent=1)
+            print(f"# solver telemetry -> {path}")
         with open(os.path.join(args.out, f"{name}.json"), "w") as f:
             json.dump(rows, f, indent=1)
         for row in rows:

@@ -34,8 +34,9 @@ from .lowerbound import (
 from .api import rightsize, evaluate, evaluate_many, ALGORITHMS
 from .local_search import eliminate_nodes
 from .rounding import concentration_rounding
-from .lp_pdhg import solve_lp_pdhg, PDHGResult
-from .batch import ProblemBatch, pack_problems, solve_lp_many
+from .lp_pdhg import solve_lp_pdhg, PDHGResult, PDHGState, SolveStats
+from .batch import ProblemBatch, pack_problems, solve_lp_many, \
+    solve_lp_sweep
 from .place_batch import place_many
 
 __all__ = [
@@ -47,6 +48,6 @@ __all__ = [
     "lp_lowerbound", "congestion_lowerbound", "no_timeline_lowerbound",
     "rightsize", "evaluate", "evaluate_many", "ALGORITHMS",
     "eliminate_nodes", "concentration_rounding", "solve_lp_pdhg",
-    "PDHGResult", "ProblemBatch", "pack_problems", "solve_lp_many",
-    "place_many",
+    "PDHGResult", "PDHGState", "SolveStats", "ProblemBatch",
+    "pack_problems", "solve_lp_many", "solve_lp_sweep", "place_many",
 ]

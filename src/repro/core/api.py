@@ -10,10 +10,12 @@ reproduces the paper's §VI protocol:
 
 ``evaluate_many(problems)`` runs the protocol over a whole instance grid
 fully batched (the fleet-sweep path): the mapping LPs of all instances
-are packed and solved together by ``core.batch.solve_lp_many``, and the
-greedy placement phase advances all instances in lockstep through
-``core.place_batch.place_many`` (``placement='loop'`` restores the
-per-instance placement loop; costs are identical either way).
+are packed and solved together by ``core.batch.solve_lp_many`` —
+tolerance-stopped by the adaptive restarted engine with ``lp_tol``, and
+warm-started between grid-adjacent sweep groups with ``warm_start=k`` —
+and the greedy placement phase advances all instances in lockstep
+through ``core.place_batch.place_many`` (``placement='loop'`` restores
+the per-instance placement loop; costs are identical either way).
 
 All problems are timeline-trimmed internally; solutions are expressed (and
 verified) in trimmed coordinates, which preserves feasibility and cost
@@ -97,7 +99,8 @@ def rightsize(
     return best
 
 
-def _solve_lp_for(problem: Problem, lp_solver: str, lp_iters: int):
+def _solve_lp_for(problem: Problem, lp_solver: str, lp_iters: int,
+                  lp_tol: float | None = None):
     """(lp_result, certified lower bound) for one instance."""
     if lp_solver == "highs":
         res = _solve_lp(problem)
@@ -105,7 +108,7 @@ def _solve_lp_for(problem: Problem, lp_solver: str, lp_iters: int):
     if lp_solver == "pdhg":
         from .lp_pdhg import solve_lp_pdhg
 
-        res = solve_lp_pdhg(problem, iters=lp_iters)
+        res = solve_lp_pdhg(problem, iters=lp_iters, tol=lp_tol)
         return res, res.lower_bound
     raise ValueError(f"unknown lp_solver {lp_solver!r}; want 'highs'|'pdhg'")
 
@@ -123,17 +126,20 @@ def _protocol_entry(trimmed: Problem, lp_result, lb: float, algos,
 
 
 def evaluate(problem: Problem, algos=ALGORITHMS, backend: str = "numpy",
-             lp_solver: str = "highs", lp_iters: int = 2000) -> dict:
+             lp_solver: str = "highs", lp_iters: int = 2000,
+             lp_tol: float | None = None) -> dict:
     """Paper §VI protocol: per-algorithm best cost + the LP lower bound.
 
     ``lp_solver='highs'`` solves the mapping LP exactly (the paper's
     setup); ``'pdhg'`` uses the accelerator-native solver, normalizing by
     its certified dual lower bound instead of the exact LP optimum.
+    ``lp_tol`` switches the PDHG solve to tolerance-based stopping
+    (adaptive restarted engine; ``lp_iters`` caps the worst case).
 
     Returns {algo: cost, ..., 'lb': lowerbound, 'normalized': {algo: cost/lb}}.
     """
     trimmed, _ = trim_timeline(problem)
-    lp_result, lb = _solve_lp_for(trimmed, lp_solver, lp_iters)
+    lp_result, lb = _solve_lp_for(trimmed, lp_solver, lp_iters, lp_tol)
     return _protocol_entry(trimmed, lp_result, lb, algos, backend)
 
 
@@ -187,7 +193,11 @@ def _protocol_many(batch, lp_results, algos, backend: str,
 
 def evaluate_many(problems, algos=ALGORITHMS, backend: str = "numpy",
                   lp_iters: int = 2000, operator: str = "auto",
-                  placement: str = "batched") -> list[dict]:
+                  placement: str = "batched",
+                  lp_tol: float | None = None,
+                  lp_adaptive: bool = True, lp_restart: bool = True,
+                  warm_start: int = 0,
+                  return_stats: bool = False):
     """§VI protocol over a grid of instances, fully batched.
 
     Equivalent to ``[evaluate(p, algos, lp_solver='pdhg') for p in
@@ -200,18 +210,64 @@ def evaluate_many(problems, algos=ALGORITHMS, backend: str = "numpy",
     of B Python-level ``find_fit`` loops.  ``placement='loop'`` restores
     the per-instance placement loop; placements (and therefore costs)
     are identical either way.
+
+    ``lp_tol=None`` (default) keeps the fixed-``lp_iters`` vanilla
+    solve.  With ``lp_tol`` set the LP phase runs the adaptive restarted
+    engine until every instance's normalized duality gap is below the
+    tolerance (``lp_iters`` caps the worst case; ``lp_adaptive`` /
+    ``lp_restart`` ablate the step-size and restart machinery), and each
+    returned entry carries a ``'solver'`` telemetry dict — iterations-
+    to-tolerance, restarts, final KKT residual, converged flag.
+
+    ``warm_start=k`` treats ``problems`` as a sweep in grid-adjacent
+    order (the order ``workload.sweep_specs`` emits) split into
+    consecutive groups of k — one sweep point's seed replicas each — and
+    solves the LP phase as a warm-started chain (``solve_lp_sweep``):
+    every group starts from its predecessor's primal/dual solution.
+    Requires ``lp_tol`` (warm starts only pay off with tolerance-based
+    stopping).  ``return_stats=True`` additionally returns the
+    ``SolveStats`` list (one per batched solve).
     """
-    from .batch import ProblemBatch, pack_problems, solve_lp_many
+    from .batch import (ProblemBatch, pack_problems, solve_lp_many,
+                        solve_lp_sweep)
 
     if placement not in ("loop", "batched"):
         raise ValueError(
             f"placement must be 'loop'|'batched', got {placement!r}")
+    if warm_start and lp_tol is None:
+        raise ValueError("warm_start requires lp_tol (tolerance-stopped "
+                         "solves); fixed-iteration solves gain nothing "
+                         "from a warm start")
     batch = problems if isinstance(problems, ProblemBatch) \
         else pack_problems(problems)  # trims each instance once
-    lp_results = solve_lp_many(batch, iters=lp_iters, operator=operator)
+    if warm_start:
+        groups = [batch.problems[i : i + warm_start]
+                  for i in range(0, batch.B, warm_start)]
+        lp_results, stats = solve_lp_sweep(
+            groups, tol=lp_tol, iters=lp_iters, operator=operator,
+            adaptive=lp_adaptive, restart=lp_restart)
+    elif lp_tol is not None:
+        lp_results, st = solve_lp_many(
+            batch, iters=lp_iters, operator=operator, tol=lp_tol,
+            adaptive=lp_adaptive, restart=lp_restart, full_output=True)
+        stats = [st]
+    else:
+        lp_results = solve_lp_many(batch, iters=lp_iters,
+                                   operator=operator)
+        stats = []
     if placement == "batched":
-        return _protocol_many(batch, lp_results, algos, backend)
-    return [
-        _protocol_entry(t, res, res.lower_bound, algos, backend)
-        for t, res in zip(batch.problems, lp_results)
-    ]
+        entries = _protocol_many(batch, lp_results, algos, backend)
+    else:
+        entries = [
+            _protocol_entry(t, res, res.lower_bound, algos, backend)
+            for t, res in zip(batch.problems, lp_results)
+        ]
+    if lp_tol is not None:
+        for entry, res in zip(entries, lp_results):
+            entry["solver"] = {"iters": res.iters,
+                               "restarts": res.restarts,
+                               "kkt": res.kkt,
+                               "converged": res.converged}
+    if return_stats:
+        return entries, stats
+    return entries

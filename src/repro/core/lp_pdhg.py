@@ -22,10 +22,18 @@ weak duality — hence still a valid lower bound on cost(opt)) are reported;
 tests check the gap closes against HiGHS.
 
 The iteration itself lives in ``repro.core.batch``: the batched
-fleet-sweep engine solves B instances in one fused scan, and this module's
-``solve_lp_pdhg`` is its B=1 case.  This file keeps the problem
-description, the result dataclass, and the difference-array operator
-primitives.
+fleet-sweep engine solves B instances in one fused solve, and this
+module's ``solve_lp_pdhg`` is its B=1 case.  Two stopping regimes:
+
+  * ``tol=None`` (legacy): fixed step, fixed ``iters`` — the vanilla
+    Chambolle–Pock loop, kept bit-stable for the golden tables;
+  * ``tol=<float>`` (PDLP-style): per-instance adaptive step sizes via
+    the backtracking ratio test, average-iterate restarts on a
+    normalized duality-gap criterion, and early exit once the
+    normalized gap drops below ``tol`` — ``iters`` becomes a cap.
+
+This file keeps the problem description, the result/telemetry
+dataclasses, and the difference-array operator primitives.
 """
 
 from __future__ import annotations
@@ -37,7 +45,7 @@ import numpy as np
 
 from .problem import Problem
 
-__all__ = ["PDHGResult", "solve_lp_pdhg"]
+__all__ = ["PDHGResult", "PDHGState", "SolveStats", "solve_lp_pdhg"]
 
 
 @dataclasses.dataclass
@@ -46,9 +54,86 @@ class PDHGResult:
     objective: float       # primal F(x): upper bound on LP optimum
     lower_bound: float     # dual G(y): certified lower bound on LP optimum
     gap: float
-    iters: int
+    iters: int             # iterations actually spent on this instance
     mapping: np.ndarray
     x_max: np.ndarray
+    restarts: int = 0      # average-iterate restarts taken (tol mode)
+    kkt: float = float("nan")  # final normalized duality gap (KKT proxy)
+    converged: bool = True     # reached tol (always True in legacy mode)
+
+
+@dataclasses.dataclass(frozen=True)
+class PDHGState:
+    """Final primal/dual iterates of a batched solve, in padded batch
+    coordinates — the warm-start handle: pass as ``solve_lp_many(...,
+    init=state)`` to start the next (neighboring) solve from here.
+    Shapes are re-aligned (cropped / zero-padded per lane) when the next
+    batch pads differently; lane b warm-starts lane b.  ``eta`` carries
+    the adapted per-lane step size, so a warm-started neighbor skips the
+    conservative power-iteration step and resumes at the tuned one."""
+
+    x: np.ndarray  # (B, n, m) float32
+    y: np.ndarray  # (B, T', m, D) float32
+    eta: np.ndarray | None = None  # (B,) float32 adapted step sizes
+
+    @property
+    def B(self) -> int:
+        return self.x.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveStats:
+    """Per-instance solver telemetry for one batched solve.
+
+    iterations: (B,) int — iterations-to-tolerance (== the cap when a
+        lane did not converge; == the fixed count in legacy mode).
+    restarts:   (B,) int — average-iterate restarts taken per lane.
+    kkt:        (B,) float — final normalized duality gap
+        (primal - dual) / (1 + |primal| + |dual|), the KKT-residual
+        proxy both the restart criterion and the stop rule use.
+    converged:  (B,) bool — lane reached ``tol``.
+    tol:        the tolerance used (None in legacy fixed-iters mode).
+    state:      final ``PDHGState`` for warm-starting a neighbor solve.
+    """
+
+    iterations: np.ndarray
+    restarts: np.ndarray
+    kkt: np.ndarray
+    converged: np.ndarray
+    tol: float | None
+    state: PDHGState
+
+    def summary(self) -> dict:
+        """JSON-ready aggregate row (the telemetry the benchmarks emit)."""
+        return {
+            "total_iters": int(self.iterations.sum()),
+            "median_iters": float(np.median(self.iterations)),
+            "max_iters": int(self.iterations.max()),
+            "total_restarts": int(self.restarts.sum()),
+            "median_kkt": float(np.median(self.kkt)),
+            "max_kkt": float(np.max(self.kkt)),
+            "converged_frac": float(np.mean(self.converged)),
+            "tol": self.tol,
+        }
+
+
+def merge_stats(stats_list) -> dict:
+    """Aggregate ``SolveStats.summary`` across a warm-started sweep's
+    per-group solves into one flat telemetry dict (the concatenated
+    batch's summary plus the per-instance lists)."""
+    merged = SolveStats(
+        iterations=np.concatenate([s.iterations for s in stats_list]),
+        restarts=np.concatenate([s.restarts for s in stats_list]),
+        kkt=np.concatenate([s.kkt for s in stats_list]),
+        converged=np.concatenate([s.converged for s in stats_list]),
+        tol=stats_list[0].tol, state=stats_list[0].state,
+    )
+    return {
+        **merged.summary(),
+        "iters": [int(i) for i in merged.iterations],
+        "restarts": [int(r) for r in merged.restarts],
+        "kkt": [float(k) for k in merged.kkt],
+    }
 
 
 # --- O(n + T) difference-array formulation (beyond-paper optimization) ----
@@ -76,10 +161,22 @@ def _congestion_adj_cumsum(y, w, start, end):
 
 def solve_lp_pdhg(problem: Problem, iters: int = 2000,
                   step_scale: float = 0.9,
-                  operator: str = "auto") -> PDHGResult:
+                  operator: str = "auto",
+                  tol: float | None = None,
+                  adaptive: bool = True,
+                  restart: bool = True,
+                  check_every: int | None = None,
+                  init: PDHGState | None = None) -> PDHGResult:
     """Single-instance PDHG solve — the B=1 case of the batched engine
     (``repro.core.batch.solve_lp_many``), so per-instance and fleet-sweep
     solves share one implementation.
+
+    With ``tol=None`` this is the legacy fixed-step, fixed-``iters``
+    loop.  With ``tol`` set, the solve stops once the normalized duality
+    gap drops below ``tol`` (``iters`` caps the worst case), using
+    PDLP-style adaptive step sizes (``adaptive``) and average-iterate
+    restarts (``restart``); ``init`` warm-starts from a previous solve's
+    ``PDHGState``.
 
     operator='cumsum' uses the O((n+T)D) difference-array form of the
     congestion operator (beyond-paper; linear-time iterations); 'dense'
@@ -87,7 +184,12 @@ def solve_lp_pdhg(problem: Problem, iters: int = 2000,
     the forward map through the batched Pallas congestion kernel itself;
     'auto' picks dense vs cumsum by memory footprint.
     """
-    from .batch import solve_lp_many
+    from .batch import DEFAULT_CHECK_EVERY, solve_lp_many
 
     return solve_lp_many([problem], iters=iters, step_scale=step_scale,
-                         operator=operator)[0]
+                         operator=operator, tol=tol, adaptive=adaptive,
+                         restart=restart,
+                         check_every=(DEFAULT_CHECK_EVERY
+                                      if check_every is None
+                                      else check_every),
+                         init=init)[0]

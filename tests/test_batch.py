@@ -69,6 +69,19 @@ class TestPack:
         with pytest.raises(ValueError):
             pack_problems([])
 
+    def test_pad_to_minimum_dims_is_exact(self):
+        """Padding past the natural max dims (the warm-started sweep's
+        common-shape packing) must not move any LP result."""
+        problems = _ragged_problems()[:3]
+        batch = pack_problems(problems, pad_to=(200, 8, 6, 40))
+        assert (batch.n, batch.m, batch.D, batch.Tp) == (200, 8, 6, 40)
+        tight = solve_lp_many(problems, iters=200)
+        padded = solve_lp_many(batch, iters=200)
+        for a, b in zip(tight, padded):
+            np.testing.assert_array_equal(a.mapping, b.mapping)
+            assert b.objective == pytest.approx(a.objective, rel=1e-5)
+            assert b.lower_bound == pytest.approx(a.lower_bound, rel=1e-5)
+
 
 class TestBatchedCongestionKernel:
     @pytest.mark.parametrize("G,n,K,T", [
