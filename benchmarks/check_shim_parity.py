@@ -1,0 +1,98 @@
+"""Shim-parity gate: legacy ``evaluate_many`` vs the ``FleetEngine`` path.
+
+    python -m benchmarks.check_shim_parity [--buckets 4] [--lp-iters 300]
+
+Runs the CI smoke grid (a small ragged sweep, every protocol algorithm)
+through both public surfaces —
+
+  * the legacy kwarg shim ``evaluate_many(...)`` (single-bucket packing,
+    the path the committed golden tables pin), and
+  * an explicitly configured ``FleetEngine`` with the shape-bucket
+    packing planner enabled (``SweepConfig(max_buckets=...)``),
+
+and fails (exit 1) on ANY protocol-cost mismatch.  This is the
+engine-redesign analogue of the golden-table gate: the typed-config
+session API, the bucket planner, and the bucket merge must reproduce the
+legacy numbers exactly — bucketed packing is a layout optimization, not
+a numerical one.  Lower bounds ride on fp32 XLA reductions whose
+reassociation may shift with the padded shape, so they are compared at a
+tight relative tolerance instead of bitwise.
+
+Wired into the CI fast tier right after the tier-1 tests.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+# tolerance for the fp32 LP lower bounds (costs must match EXACTLY)
+LB_REL = 1e-5
+
+
+def run_grid(buckets: int, lp_iters: int):
+    """(legacy entries, FleetResult) for the smoke grid."""
+    from repro.core import (FleetEngine, SolverConfig, SweepConfig,
+                            evaluate_many)
+    from repro.workload import SyntheticSpec, synthetic_batch
+
+    specs = [SyntheticSpec(n=36 + 8 * i, m=4, D=3, T=10 + 2 * i, seed=s)
+             for i in range(6) for s in range(2)]
+    problems = synthetic_batch(specs)
+    legacy = evaluate_many(problems, lp_iters=lp_iters)
+    engine = FleetEngine(solver=SolverConfig(iters=lp_iters),
+                         sweep=SweepConfig(max_buckets=buckets))
+    return legacy, engine.evaluate(problems)
+
+
+def compare(legacy, result) -> list[str]:
+    """Returns mismatch messages (empty == gate passes)."""
+    errs = []
+    if len(legacy) != len(result.entries):
+        return [f"entry count mismatch: legacy {len(legacy)} vs engine "
+                f"{len(result.entries)}"]
+    for i, (a, b) in enumerate(zip(legacy, result.entries)):
+        if set(a["costs"]) != set(b["costs"]):
+            errs.append(f"instance {i}: algo sets differ")
+            continue
+        for algo, cost in a["costs"].items():
+            if b["costs"][algo] != cost:
+                errs.append(
+                    f"instance {i} algo {algo}: legacy cost {cost!r} != "
+                    f"engine cost {b['costs'][algo]!r}")
+        if abs(b["lb"] - a["lb"]) > LB_REL * max(abs(a["lb"]), 1e-12):
+            errs.append(
+                f"instance {i}: lower bound drifted beyond rel {LB_REL}: "
+                f"legacy {a['lb']!r} vs engine {b['lb']!r}")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--buckets", type=int, default=4,
+                    help="max shape buckets of the engine path "
+                         "(default 4)")
+    ap.add_argument("--lp-iters", type=int, default=300,
+                    help="fixed LP iteration count of both paths "
+                         "(default 300)")
+    args = ap.parse_args(argv)
+
+    legacy, result = run_grid(args.buckets, args.lp_iters)
+    plan = result.plan
+    print(f"shim parity: B={len(legacy)} grid, engine packed "
+          f"{plan.n_buckets} bucket(s) {[b.B for b in plan.buckets]}, "
+          f"padded-cell waste {plan.waste_single:.1%} -> "
+          f"{plan.waste_packed:.1%} "
+          f"({plan.waste_reduction:.1%} of waste eliminated)")
+    errs = compare(legacy, result)
+    if errs:
+        for e in errs:
+            print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    print("shim parity: PASS (all protocol costs identical)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

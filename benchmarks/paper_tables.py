@@ -5,12 +5,14 @@ and writes JSON under results/paper/.  The ``scale`` knob trades fidelity
 for wall time: 'paper' replicates the paper's sizes (n=1000, 5 seeds);
 'quick' shrinks n and seeds for CI.
 
-Each sweep table issues ONE batched LP solve for its whole instance grid
-(``lp='pdhg'``, the fleet-sweep engine in ``repro.core.batch``) and, with
-``placement='batched'`` (default), ONE lockstep greedy placement per
-protocol combo (``repro.core.place_batch``).  Pass ``lp='highs'`` for the
-paper's original per-instance exact-LP loop and ``placement='loop'`` for
-the per-instance placement loop (identical placements either way).
+Each sweep table runs its whole instance grid through ONE configured
+``repro.core.FleetEngine`` session (``lp='pdhg'``): one warm-started
+batched LP chain plus, with ``placement='batched'`` (default), ONE
+lockstep greedy placement per protocol combo.  Pass ``lp='highs'`` for
+the paper's original per-instance exact-LP loop and ``placement='loop'``
+for the per-instance placement loop (identical placements either way);
+``buckets`` routes the ``fleet_sweep`` table's bucketing section through
+the shape-bucket packing planner.
 """
 
 from __future__ import annotations
@@ -19,8 +21,9 @@ import time
 
 import numpy as np
 
-from repro.core import evaluate_many, solve_lp, trim_timeline, \
-    rightsize, no_timeline_lowerbound
+from repro.core import (FleetEngine, PlacementConfig, SolverConfig,
+                        SweepConfig, evaluate_many, no_timeline_lowerbound,
+                        rightsize, solve_lp, trim_timeline)
 from repro.workload import SyntheticSpec, gct_like_instance, \
     sweep_specs, synthetic_batch, synthetic_instance
 
@@ -79,24 +82,27 @@ def _sweep_eval(groups, sp, lp="pdhg", max_slots=None,
     """Run the §VI protocol over a whole sweep grid.
 
     ``groups[g]`` holds one sweep point's seed-replicated instances, in
-    grid-adjacent (``sweep_specs``) order.  With ``lp='pdhg'`` the LP
-    phase runs the adaptive restarted engine to ``sp['lp_tol']`` as a
-    warm-started chain over the sweep — each group seeds from its
-    neighbor's primal/dual solution — and (with ``placement='batched'``)
-    ONE lockstep placement per protocol combo (``evaluate_many``);
-    ``lp='highs'`` reproduces the per-instance exact-LP loop
-    (``max_slots`` caps its constraint rows at GCT scale).  Returns one
-    seed-averaged dict per group with the normalized cost per algorithm,
-    'lb', and per-algo 'wall_s'.
+    grid-adjacent (``sweep_specs``) order.  With ``lp='pdhg'`` the grid
+    runs through a ``FleetEngine`` session: the LP phase runs the
+    adaptive restarted engine to ``sp['lp_tol']`` as a warm-started
+    chain over the sweep — each group seeds from its neighbor's
+    primal/dual solution — and (with ``placement='batched'``) ONE
+    lockstep placement per protocol combo; ``lp='highs'`` reproduces
+    the per-instance exact-LP loop (``max_slots`` caps its constraint
+    rows at GCT scale).  Returns one seed-averaged dict per group with
+    the normalized cost per algorithm, 'lb', and per-algo 'wall_s'.
     """
     flat = [p for g in groups for p in g]
     if lp == "pdhg":
         sizes = {len(g) for g in groups}
-        warm = sizes.pop() if len(sizes) == 1 and len(groups) > 1 else 0
-        entries = evaluate_many(flat, algos=ALGOS,
-                                lp_iters=sp["lp_max_iters"],
-                                lp_tol=sp["lp_tol"], warm_start=warm,
-                                placement=placement)
+        warm = sizes.pop() if len(sizes) == 1 and len(groups) > 1 else None
+        engine = FleetEngine(
+            solver=SolverConfig(tol=sp["lp_tol"],
+                                iters=sp["lp_max_iters"]),
+            placement=PlacementConfig(engine=placement),
+            sweep=SweepConfig(warm_start=warm),
+            algos=ALGOS)
+        entries = engine.evaluate(flat).entries
     else:
         entries = [_highs_entry(p, max_slots) for p in flat]
     rows, i = [], 0
@@ -347,7 +353,7 @@ def local_search_beyond(scale="default", lp="pdhg", placement="batched",
 
 
 def fleet_sweep(scale="default", lp="pdhg", placement="batched",
-                   lp_tol=None, lp_max_iters=None):
+                   lp_tol=None, lp_max_iters=None, buckets=None):
     """The batched engine's headline: LP + placement phases of a ragged
     Table-I-style sweep grid.  The LP phase runs as one fused padded
     solve vs the per-instance loop (which pays a fresh JIT compile per
@@ -355,6 +361,14 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
     batched mappings either through the lockstep ``place_many`` engine
     or the per-instance ``two_phase`` loop, timing all four
     {fit} x {filling} protocol combos.
+
+    The shape-bucketing section runs the same grid through a
+    ``FleetEngine`` with the bucket planner enabled (``--buckets``, or
+    a per-scale default): the ragged grid is split into a few shape
+    buckets instead of one worst-case padded shape, costs must match
+    the single-bucket path exactly, and the table reports the bucket
+    count, padded-cell waste fraction before/after bucketing, and
+    per-bucket compile+solve seconds.
 
     The solver-telemetry section then runs the same grid through the
     tolerance-stopped engine three ways — fixed-step vanilla, adaptive+
@@ -414,6 +428,31 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
         for many, loop in zip(placed_b, placed_l)
         for a, b in zip(many, loop))
 
+    # --- shape-bucketed packing: FleetEngine vs single-bucket --------
+    # the ragged grid padded to ONE worst-case shape wastes most of its
+    # padded cells; the engine's bucket planner splits it into a few
+    # shape buckets (cost model: padded cells + per-bucket compile) and
+    # must reproduce the single-bucket protocol costs exactly
+    n_buckets = buckets or {"quick": 4, "default": 4, "paper": 6}.get(
+        scale, 4)
+    bucket_algos = ("lp-map", "lp-map-f")
+    engine = FleetEngine(solver=SolverConfig(iters=iters),
+                         sweep=SweepConfig(max_buckets=n_buckets),
+                         algos=bucket_algos)
+    jax.clear_caches()
+    fres = engine.evaluate(problems)
+    plan = fres.plan
+    single = evaluate_many(problems, algos=bucket_algos, lp_iters=iters)
+    bucket_costs_identical = all(
+        a["costs"] == b["costs"] for a, b in zip(single, fres.entries))
+    bucketing = {
+        **plan.summary(),
+        "bucket_lp_s": [round(t, 3) for t in fres.timings["bucket_lp_s"]],
+        "bucket_place_s": [round(t, 3)
+                           for t in fres.timings["bucket_place_s"]],
+        "costs_identical": bool(bucket_costs_identical),
+    }
+
     # --- solver telemetry: vanilla vs adaptive vs warm-started sweep ---
     tol, cap = sp["lp_tol"], sp["lp_max_iters"]
     res_van, st_van = solve_lp_many(problems, iters=cap, tol=tol,
@@ -460,6 +499,7 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
         # the regression gate grants one quantum of slack on top of the
         # fractional budget
         "check_every": DEFAULT_CHECK_EVERY,
+        "bucketing": bucketing,
         "vanilla": van, "adaptive": ada, "warm": warm,
         "iter_reduction_vs_vanilla": round(
             van["total_iters"] / max(warm["total_iters"], 1), 2),
@@ -478,6 +518,17 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
         "placement_speedup": round(
             t_place_l / max(t_place_b, 1e-9), 1),
         "placements_identical": place_agree,
+        # shape-bucketed packing (FleetEngine planner) vs the one
+        # worst-case padded shape: bucket count, padded-cell waste
+        # fraction before/after, per-bucket cold compile+solve seconds
+        "buckets": plan.n_buckets,
+        "bucket_sizes": [b.B for b in plan.buckets],
+        "waste_frac_single": round(plan.waste_single, 4),
+        "waste_frac_bucketed": round(plan.waste_packed, 4),
+        "waste_reduction_pct": round(100 * plan.waste_reduction, 1),
+        "bucket_lp_s": bucketing["bucket_lp_s"],
+        "bucket_place_s": bucketing["bucket_place_s"],
+        "bucket_costs_identical": bucket_costs_identical,
         # convergence telemetry (iterations are deterministic, unlike
         # the wall-clock columns — these are what the CI gate pins)
         "lp_tol": tol,

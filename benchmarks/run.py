@@ -4,6 +4,7 @@
                              [--lp pdhg|highs]
                              [--placement batched|loop]
                              [--lp-tol 5e-3] [--lp-max-iters 4000]
+                             [--buckets 4]
                              [--out results/paper]
 
 Prints ``table,key=value,...`` CSV rows; writes JSON per table.  With the
@@ -16,10 +17,13 @@ phase as one lockstep ``place_many`` per protocol combo
 (repro.core.place_batch).  ``--lp highs`` / ``--placement loop`` restore
 the paper's per-instance loops (placements and costs are identical).
 
-The ``fleet_sweep`` table additionally emits solver convergence
-telemetry (iterations-to-tolerance, restarts, final KKT residuals for
-vanilla vs adaptive vs warm-started solves), written next to the timing
-output as ``<out>/solver_stats.json`` — the file the CI convergence-
+The ``fleet_sweep`` table additionally emits shape-bucketing telemetry
+(bucket count, padded-cell waste fraction before/after the FleetEngine
+packing planner, per-bucket compile+solve seconds; ``--buckets`` caps
+the planner) and solver convergence telemetry (iterations-to-tolerance,
+restarts, final KKT residuals for vanilla vs adaptive vs warm-started
+solves), written next to the timing output as
+``<out>/solver_stats.json`` — the file the CI convergence-
 regression gate (benchmarks/check_convergence.py) diffs against
 ``results/golden/solver_stats.json``.  Roofline rows (from dry-run
 artifacts, if present) are appended at the end.
@@ -28,6 +32,7 @@ artifacts, if present) are appended at the end.
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import os
 import time
@@ -55,11 +60,18 @@ def main(argv=None) -> None:
     ap.add_argument("--lp-max-iters", type=int, default=None,
                     help="worst-case PDHG iteration cap under --lp-tol "
                          "(default: per-scale)")
+    ap.add_argument("--buckets", type=int, default=None,
+                    help="max shape buckets of the FleetEngine packing "
+                         "planner in the fleet_sweep bucketing section "
+                         "(default: per-scale); 1 forces legacy "
+                         "single-bucket packing")
     ap.add_argument("--only", default="")
     ap.add_argument("--out", default="results/paper")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
     args = ap.parse_args(argv)
 
+    if args.buckets is not None and args.buckets < 1:
+        ap.error(f"--buckets must be >= 1, got {args.buckets}")
     os.makedirs(args.out, exist_ok=True)
     only = set(args.only.split(",")) if args.only else None
     if only:
@@ -71,8 +83,12 @@ def main(argv=None) -> None:
         if only and name not in only:
             continue
         t0 = time.perf_counter()
+        kwargs = {}
+        if "buckets" in inspect.signature(fn).parameters:
+            kwargs["buckets"] = args.buckets
         rows = fn(scale=args.scale, lp=args.lp, placement=args.placement,
-                  lp_tol=args.lp_tol, lp_max_iters=args.lp_max_iters)
+                  lp_tol=args.lp_tol, lp_max_iters=args.lp_max_iters,
+                  **kwargs)
         dt = time.perf_counter() - t0
         # solver telemetry rides on the row as a private blob: write it
         # as its own artifact next to the timing output

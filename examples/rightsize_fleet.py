@@ -9,6 +9,13 @@ Job demands are measured from the multi-pod dry-run artifacts
 first for fully-measured demands, then:
 
     PYTHONPATH=src python examples/rightsize_fleet.py
+
+For the fleet-scale what-if frontier — N demand-scaled scenarios
+evaluated through ONE ``FleetEngine`` session (one fused batched LP
+solve + lockstep placements, the typed-config API from
+``repro.core.engine``):
+
+    PYTHONPATH=src python examples/rightsize_fleet.py --fleet 8
 """
 
 import sys
@@ -16,4 +23,7 @@ import sys
 from repro.launch.rightsize import run
 
 if __name__ == "__main__":
-    run(["--compare"] + sys.argv[1:])
+    argv = sys.argv[1:]
+    if "--fleet" not in argv:
+        argv = ["--compare"] + argv
+    run(argv)

@@ -2,7 +2,11 @@
 
 Public API:
     Problem, NodeTypes, Solution        — data model
-    rightsize, evaluate, evaluate_many  — solve / paper-protocol evaluation
+    rightsize, evaluate                 — solve / paper-protocol evaluation
+    FleetEngine, SolverConfig,
+    PlacementConfig, SweepConfig        — typed-config fleet session API
+    FleetResult, PackPlan, plan_buckets — structured results + bucketing
+    evaluate_many                       — legacy kwarg shim over FleetEngine
     solve_lp_many, pack_problems        — batched fleet-sweep LP engine
     place_many                          — batched lockstep placement engine
     penalty_map, lp_map, solve_lp       — mapping strategies
@@ -38,6 +42,15 @@ from .lp_pdhg import solve_lp_pdhg, PDHGResult, PDHGState, SolveStats
 from .batch import ProblemBatch, pack_problems, solve_lp_many, \
     solve_lp_sweep
 from .place_batch import place_many
+from .engine import (
+    FleetEngine,
+    FleetResult,
+    PackPlan,
+    PlacementConfig,
+    SolverConfig,
+    SweepConfig,
+    plan_buckets,
+)
 
 __all__ = [
     "Problem", "NodeTypes", "Solution", "trim_timeline", "active_mask",
@@ -50,4 +63,6 @@ __all__ = [
     "eliminate_nodes", "concentration_rounding", "solve_lp_pdhg",
     "PDHGResult", "PDHGState", "SolveStats", "ProblemBatch",
     "pack_problems", "solve_lp_many", "solve_lp_sweep", "place_many",
+    "FleetEngine", "FleetResult", "PackPlan", "PlacementConfig",
+    "SolverConfig", "SweepConfig", "plan_buckets",
 ]

@@ -1,4 +1,4 @@
-"""High-level TL-Rightsizing API.
+"""High-level TL-Rightsizing API (single-instance calls + legacy shims).
 
 ``rightsize(problem, algo)`` runs one named algorithm; ``evaluate(problem)``
 reproduces the paper's §VI protocol:
@@ -8,14 +8,16 @@ reproduces the paper's §VI protocol:
   * LP-map        — LP mapping, min over {first, similarity}
   * LP-map-F      — LP mapping + filling, min over {first, similarity}
 
-``evaluate_many(problems)`` runs the protocol over a whole instance grid
-fully batched (the fleet-sweep path): the mapping LPs of all instances
-are packed and solved together by ``core.batch.solve_lp_many`` —
-tolerance-stopped by the adaptive restarted engine with ``lp_tol``, and
-warm-started between grid-adjacent sweep groups with ``warm_start=k`` —
-and the greedy placement phase advances all instances in lockstep
-through ``core.place_batch.place_many`` (``placement='loop'`` restores
-the per-instance placement loop; costs are identical either way).
+The fleet-scale surface lives in ``core.engine``: a ``FleetEngine``
+session configured by frozen dataclasses (``SolverConfig`` /
+``PlacementConfig`` / ``SweepConfig``) packs a whole instance grid into
+shape buckets, solves every mapping LP batched, advances every greedy
+placement in lockstep, and returns a structured ``FleetResult``.
+``evaluate_many`` in this module is kept as a thin kwarg shim over that
+engine — it maps the legacy keyword arguments onto the typed configs
+one-to-one, always runs single-bucket (so the committed golden tables
+stay bit-identical), and returns the legacy list-of-entry-dicts.  New
+code should construct a ``FleetEngine`` directly.
 
 All problems are timeline-trimmed internally; solutions are expressed (and
 verified) in trimmed coordinates, which preserves feasibility and cost
@@ -143,73 +145,33 @@ def evaluate(problem: Problem, algos=ALGORITHMS, backend: str = "numpy",
     return _protocol_entry(trimmed, lp_result, lb, algos, backend)
 
 
-def _protocol_many(batch, lp_results, algos, backend: str,
-                   check: bool = True) -> list[dict]:
-    """Batched placement protocol: every (mapping, fit, filling) combo of
-    every algorithm runs as ONE lockstep ``place_many`` over the grid."""
-    from .place_batch import place_many
-
-    B = batch.B
-    out = [{"lb": res.lower_bound, "costs": {}, "normalized": {},
-            "wall_s": {}} for res in lp_results]
-    for algo in algos:
-        t0 = time.perf_counter()
-        filling = algo.endswith("-f")
-        if algo in ("penalty-map", "penalty-map-f"):
-            mapsets = [[penalty_map(t, kind) for t in batch.problems]
-                       for kind in ("avg", "max")]
-        elif algo in ("lp-map", "lp-map-f"):
-            mapsets = [[res.mapping for res in lp_results]]
-        else:
-            # extended algos (e.g. "+ls") keep the per-instance path
-            for b, t in enumerate(batch.problems):
-                sol = rightsize(t, algo, backend=backend,
-                                lp_result=lp_results[b], check=check)
-                out[b]["costs"][algo] = sol.cost(t)
-                out[b]["wall_s"][algo] = sol.meta["wall_s"]
-            continue
-        best: list[Solution | None] = [None] * B
-        best_cost = [float("inf")] * B
-        for maps in mapsets:
-            for fit in FIT_POLICIES:
-                sols = place_many(batch, maps, fit=fit, filling=filling,
-                                  backend=backend, meta={"algo": algo})
-                for b, (t, s) in enumerate(zip(batch.problems, sols)):
-                    c = s.cost(t)
-                    if c < best_cost[b]:
-                        best_cost[b], best[b] = c, s
-        wall = (time.perf_counter() - t0) / B
-        for b, t in enumerate(batch.problems):
-            if check:
-                verify(t, best[b])
-            out[b]["costs"][algo] = best_cost[b]
-            out[b]["wall_s"][algo] = wall
-    for entry in out:
-        lb = max(entry["lb"], 1e-12)
-        entry["normalized"] = {a: c / lb
-                               for a, c in entry["costs"].items()}
-    return out
-
-
 def evaluate_many(problems, algos=ALGORITHMS, backend: str = "numpy",
                   lp_iters: int = 2000, operator: str = "auto",
                   placement: str = "batched",
                   lp_tol: float | None = None,
                   lp_adaptive: bool = True, lp_restart: bool = True,
-                  warm_start: int = 0,
+                  warm_start: int | None = None,
                   return_stats: bool = False):
-    """§VI protocol over a grid of instances, fully batched.
+    """§VI protocol over a grid of instances, fully batched — the
+    **legacy kwarg shim** over ``core.engine.FleetEngine``.
 
     Equivalent to ``[evaluate(p, algos, lp_solver='pdhg') for p in
     problems]`` — the batched engines pad ragged instances exactly, so
     costs match the per-instance loop — but the LP phase is a single
     compiled ``solve_lp_many`` call for the whole grid, and (with
     ``placement='batched'``, the default) the greedy placement phase
-    advances all instances in lockstep through ``place_many``: one
-    batched feasibility+similarity scoring pass per task event instead
-    of B Python-level ``find_fit`` loops.  ``placement='loop'`` restores
-    the per-instance placement loop; placements (and therefore costs)
-    are identical either way.
+    advances all instances in lockstep through ``place_many``.
+    ``placement='loop'`` restores the per-instance placement loop;
+    placements (and therefore costs) are identical either way.
+
+    Every kwarg maps onto one typed-config field (see the README
+    migration table): ``lp_iters/operator/lp_tol/lp_adaptive/lp_restart``
+    -> ``SolverConfig``, ``placement/backend`` -> ``PlacementConfig``,
+    ``warm_start`` -> ``SweepConfig``.  The shim always runs
+    single-bucket (``SweepConfig(max_buckets=1)``) so the committed
+    golden tables stay bit-identical; shape-bucketed packing of very
+    ragged grids is a ``FleetEngine`` feature
+    (``SweepConfig(max_buckets=k)``).
 
     ``lp_tol=None`` (default) keeps the fixed-``lp_iters`` vanilla
     solve.  With ``lp_tol`` set the LP phase runs the adaptive restarted
@@ -225,49 +187,32 @@ def evaluate_many(problems, algos=ALGORITHMS, backend: str = "numpy",
     solves the LP phase as a warm-started chain (``solve_lp_sweep``):
     every group starts from its predecessor's primal/dual solution.
     Requires ``lp_tol`` (warm starts only pay off with tolerance-based
-    stopping).  ``return_stats=True`` additionally returns the
-    ``SolveStats`` list (one per batched solve).
+    stopping).  ``warm_start=None`` (default) disables chaining; a
+    non-positive k raises ``ValueError`` rather than being treated as
+    falsy "off".  When k does not divide the grid size the trailing
+    group is smaller and cold-starts (its lanes no longer align with
+    the predecessor state) — costs are unaffected, only that group's
+    iteration telemetry loses the warm-start advantage.
+    ``return_stats=True`` additionally returns the ``SolveStats`` list
+    (one per batched solve / warm-started group).
     """
-    from .batch import (ProblemBatch, pack_problems, solve_lp_many,
-                        solve_lp_sweep)
+    from .engine import (FleetEngine, PlacementConfig, SolverConfig,
+                         SweepConfig)
 
-    if placement not in ("loop", "batched"):
-        raise ValueError(
-            f"placement must be 'loop'|'batched', got {placement!r}")
-    if warm_start and lp_tol is None:
+    sweep = SweepConfig(warm_start=warm_start)  # rejects warm_start <= 0
+    if warm_start is not None and lp_tol is None:
         raise ValueError("warm_start requires lp_tol (tolerance-stopped "
                          "solves); fixed-iteration solves gain nothing "
                          "from a warm start")
-    batch = problems if isinstance(problems, ProblemBatch) \
-        else pack_problems(problems)  # trims each instance once
-    if warm_start:
-        groups = [batch.problems[i : i + warm_start]
-                  for i in range(0, batch.B, warm_start)]
-        lp_results, stats = solve_lp_sweep(
-            groups, tol=lp_tol, iters=lp_iters, operator=operator,
-            adaptive=lp_adaptive, restart=lp_restart)
-    elif lp_tol is not None:
-        lp_results, st = solve_lp_many(
-            batch, iters=lp_iters, operator=operator, tol=lp_tol,
-            adaptive=lp_adaptive, restart=lp_restart, full_output=True)
-        stats = [st]
-    else:
-        lp_results = solve_lp_many(batch, iters=lp_iters,
-                                   operator=operator)
-        stats = []
-    if placement == "batched":
-        entries = _protocol_many(batch, lp_results, algos, backend)
-    else:
-        entries = [
-            _protocol_entry(t, res, res.lower_bound, algos, backend)
-            for t, res in zip(batch.problems, lp_results)
-        ]
-    if lp_tol is not None:
-        for entry, res in zip(entries, lp_results):
-            entry["solver"] = {"iters": res.iters,
-                               "restarts": res.restarts,
-                               "kkt": res.kkt,
-                               "converged": res.converged}
+    engine = FleetEngine(
+        solver=SolverConfig(tol=lp_tol, iters=lp_iters,
+                            adaptive=lp_adaptive, restart=lp_restart,
+                            operator=operator),
+        placement=PlacementConfig(engine=placement, backend=backend),
+        sweep=sweep,
+        algos=algos,
+    )
+    result = engine.evaluate(problems)
     if return_stats:
-        return entries, stats
-    return entries
+        return result.entries, result.stats
+    return result.entries

@@ -129,18 +129,29 @@ class ProblemBatch:
     def D(self) -> int:
         return self.dem.shape[2]
 
+    @property
+    def shape(self) -> tuple[int, int, int, int]:
+        """The common padded (n, m, D, T') every instance was packed to
+        — the ``pad_to`` that reproduces this batch's layout (what the
+        engine's shard dispatch passes so shards share one compile)."""
+        return (self.n, self.m, self.D, self.Tp)
+
     def weights(self) -> np.ndarray:
         """(B, n, m, D) operator weights dem/cap, zeroed on padding."""
         w = self.dem[:, :, None, :] / self.cap[:, None, :, :]
         return w * self.type_mask[:, None, :, None]
 
 
-def pack_problems(problems, pad_to=None) -> ProblemBatch:
+def pack_problems(problems, pad_to=None,
+                  assume_trimmed: bool = False) -> ProblemBatch:
     """Trim each instance's timeline, then pad-and-stack the batch.
 
     ``pad_to=(n, m, D, Tp)`` sets *minimum* padded dims — warm-started
     sweeps pack every group to one common shape so all groups share one
     compiled solve and states align lane-for-lane without re-padding.
+    ``assume_trimmed`` skips the (idempotent) per-instance trim for
+    callers that already hold trimmed instances — e.g. the FleetEngine,
+    which trims once up front to plan its shape buckets.
     """
     problems = list(problems)
     if not problems:
@@ -149,7 +160,7 @@ def pack_problems(problems, pad_to=None) -> ProblemBatch:
     for p in problems:
         if p.n == 0:
             raise ValueError("cannot batch an empty instance")
-        trimmed.append(trim_timeline(p)[0])
+        trimmed.append(p if assume_trimmed else trim_timeline(p)[0])
     n = max(t.n for t in trimmed)
     m = max(t.m for t in trimmed)
     D = max(t.D for t in trimmed)

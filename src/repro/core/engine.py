@@ -1,0 +1,736 @@
+"""FleetEngine: the typed-config session API of the fleet-sweep path.
+
+PRs 1-3 grew the fleet evaluation surface one keyword argument at a
+time: ``evaluate_many`` ended up with ten kwargs spanning three
+orthogonal concerns (how to solve the mapping LPs, how to run the greedy
+placement phase, how to batch/chain the sweep) and returned bare lists
+of nested dicts.  This module redesigns that surface around a session
+object:
+
+  * ``SolverConfig``    — LP phase: stopping regime (tol/iters), the
+                          adaptive/restart machinery, operator form.
+  * ``PlacementConfig`` — greedy phase: lockstep vs per-instance engine,
+                          fit-policy scan, filling override, scoring
+                          backend.
+  * ``SweepConfig``     — fleet shape: shape-bucketed packing (this
+                          module's planner), warm-started sweep
+                          chaining, shard size of the LP dispatch.
+  * ``FleetEngine``     — one configured session: ``pack(problems)``,
+                          ``solve(...)``, ``place(...)``,
+                          ``evaluate(...)`` -> ``FleetResult``.
+
+Shape-bucketed packing (ROADMAP follow-on, landed here): a very ragged
+grid padded to ONE worst-case ``(n, m, D, T')`` shape wastes most of its
+padded FLOPs on zeros — e.g. a sweep whose instances span n=30..130 and
+T=8..30 pads every instance to (130, 30).  ``plan_buckets`` partitions
+the instances into a small number of shape buckets chosen by a cost
+model (padded cells minimized, with a per-extra-bucket overhead term
+standing in for the extra XLA compile), each bucket is packed/solved/
+placed on its own padded shape, and results are merged back into
+submission order.  Exactness rides on the engine's padding invariant
+(padding never perturbs real coordinates — pinned by
+``tests/test_batch.py::TestPack::test_pad_to_minimum_dims_is_exact``),
+so bucketed costs equal single-bucket costs exactly while the padded-
+cell waste drops measurably.
+
+``core.api.evaluate_many`` / ``evaluate`` remain as thin shims mapping
+the legacy kwargs onto these configs (single-bucket, so golden tables
+stay bit-stable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from .api import ALGORITHMS
+from .batch import (DEFAULT_CHECK_EVERY, ProblemBatch, pack_problems,
+                    solve_lp_many, solve_lp_sweep)
+from .lp_pdhg import PDHGResult, SolveStats
+from .penalty import penalty_map
+from .place_batch import place_many
+from .placement import FIT_POLICIES, two_phase
+from .problem import Problem, trim_timeline
+from .solution import Solution, verify
+
+__all__ = [
+    "SolverConfig", "PlacementConfig", "SweepConfig", "FleetEngine",
+    "FleetResult", "PackPlan", "Bucket", "plan_buckets",
+    "DEFAULT_BUCKET_OVERHEAD",
+]
+
+_OPERATORS = ("auto", "dense", "cumsum", "pallas")
+_PLACEMENT_ENGINES = ("batched", "loop")
+_PLACEMENT_BACKENDS = ("numpy", "kernel")
+
+# Planner cost of one extra shape bucket (one extra XLA compile of the
+# fused stepper), expressed as a fraction of the single-bucket padded
+# cell count: splitting must save at least this fraction of the whole
+# grid's padded work per added bucket to pay for its compile.
+DEFAULT_BUCKET_OVERHEAD = 0.03
+
+
+# --- typed configs ---------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Mapping-LP phase configuration (``core.batch.solve_lp_many``).
+
+    tol=None runs the legacy fixed-step, fixed-``iters`` solve (bit-
+    stable; the golden tables pin it); tol=<float> runs the adaptive
+    restarted engine until every lane's normalized duality gap is below
+    tol, with ``iters`` demoted to the worst-case cap.  ``adaptive`` /
+    ``restart`` ablate the PDLP machinery; ``operator`` picks the
+    congestion-operator form; ``check_every`` is the tol-mode
+    convergence-check cadence (iteration telemetry quantizes to it).
+    """
+
+    tol: float | None = None
+    iters: int = 2000
+    adaptive: bool = True
+    restart: bool = True
+    operator: str = "auto"
+    step_scale: float = 0.9
+    check_every: int = DEFAULT_CHECK_EVERY
+
+    def __post_init__(self):
+        if self.tol is not None and not self.tol > 0:
+            raise ValueError(f"tol must be positive or None, got {self.tol!r}")
+        if self.iters < 1:
+            raise ValueError(f"iters must be >= 1, got {self.iters!r}")
+        if self.operator not in _OPERATORS:
+            raise ValueError(
+                f"operator must be one of {_OPERATORS}, got {self.operator!r}")
+        if not self.step_scale > 0:
+            raise ValueError(
+                f"step_scale must be positive, got {self.step_scale!r}")
+        if self.check_every < 1:
+            raise ValueError(
+                f"check_every must be >= 1, got {self.check_every!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementConfig:
+    """Greedy placement phase configuration.
+
+    engine='batched' advances all instances in lockstep
+    (``place_many``); 'loop' restores the per-instance ``two_phase``
+    loop (placements and costs are identical either way).  fit='best'
+    scans every fit policy and keeps the per-instance minimum (the
+    paper's §VI protocol); a concrete policy ('first'/'similarity')
+    narrows the scan.  ``filling`` only applies to direct
+    ``FleetEngine.place`` calls (the protocol derives filling from the
+    algorithm name); ``backend`` routes the scoring pass ('kernel' =
+    the batch-dim-aware Pallas fit kernel).  ``check`` verifies every
+    returned placement against the instance constraints.
+    """
+
+    engine: str = "batched"
+    fit: str = "best"
+    filling: bool = False
+    backend: str = "numpy"
+    check: bool = True
+
+    def __post_init__(self):
+        if self.engine not in _PLACEMENT_ENGINES:
+            raise ValueError(
+                f"placement engine must be one of {_PLACEMENT_ENGINES}, "
+                f"got {self.engine!r}")
+        if self.fit != "best" and self.fit not in FIT_POLICIES:
+            raise ValueError(
+                f"fit must be 'best' or one of {FIT_POLICIES}, "
+                f"got {self.fit!r}")
+        if self.backend not in _PLACEMENT_BACKENDS:
+            raise ValueError(
+                f"placement backend must be one of {_PLACEMENT_BACKENDS}, "
+                f"got {self.backend!r}")
+
+    @property
+    def fits(self) -> tuple[str, ...]:
+        return FIT_POLICIES if self.fit == "best" else (self.fit,)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    """Fleet-shape configuration: bucketing, warm starts, sharding.
+
+    max_buckets caps the shape-bucket partition of the packing planner
+    (1 = legacy single-bucket packing); bucket_overhead is the planner's
+    cost of one extra bucket (one extra compile), as a fraction of the
+    single-bucket padded cell count.  warm_start=k treats the instances
+    as a grid-adjacent sweep chained in consecutive groups of k (None =
+    off; k <= 0 is an error, not "off" — and when k does not divide B
+    the trailing group is smaller and COLD-starts, because its lanes no
+    longer align with the predecessor state).  shard_size splits each
+    bucket's LP solve into dispatches of at most that many instances
+    (peak-memory knob; shards share the bucket's padded shape, so all
+    equal-sized shards reuse one compile and results are unchanged).
+
+    warm_start and max_buckets > 1 are mutually exclusive: the warm
+    chain packs every group to one common shape so primal/dual states
+    carry over lane-for-lane, which is the opposite trade of bucketing.
+    """
+
+    warm_start: int | None = None
+    shard_size: int | None = None
+    max_buckets: int = 1
+    bucket_overhead: float = DEFAULT_BUCKET_OVERHEAD
+
+    def __post_init__(self):
+        if self.warm_start is not None and self.warm_start <= 0:
+            raise ValueError(
+                f"warm_start must be a positive group size, got "
+                f"{self.warm_start!r}; use warm_start=None to disable "
+                f"warm-started sweep chaining")
+        if self.shard_size is not None and self.shard_size <= 0:
+            raise ValueError(
+                f"shard_size must be a positive instance count, got "
+                f"{self.shard_size!r}")
+        if self.max_buckets < 1:
+            raise ValueError(
+                f"max_buckets must be >= 1, got {self.max_buckets!r}")
+        if self.bucket_overhead < 0:
+            raise ValueError(
+                f"bucket_overhead must be >= 0, got {self.bucket_overhead!r}")
+        if self.warm_start is not None and self.max_buckets > 1:
+            raise ValueError(
+                "warm_start and max_buckets > 1 are mutually exclusive: "
+                "warm-started sweep chaining packs every group to one "
+                "common shape (states must align lane-for-lane), while "
+                "bucketing splits shapes apart")
+        if self.warm_start is not None and self.shard_size is not None:
+            raise ValueError(
+                "warm_start and shard_size are mutually exclusive: the "
+                "warm chain already dispatches one group at a time "
+                "(warm_start IS its shard size), so a separate shard "
+                "size would be silently ignored")
+
+
+# --- shape-bucketed packing planner ----------------------------------------
+
+def _own_cells(t: Problem) -> int:
+    return t.n * t.m * t.D * t.T
+
+
+def plan_buckets(problems, max_buckets: int = 1,
+                 overhead: float = DEFAULT_BUCKET_OVERHEAD) -> list[list[int]]:
+    """Partition (trimmed) instances into <= max_buckets shape buckets.
+
+    Minimizes total padded cells ``sum_b B_b * n̂_b * m̂_b * D̂_b * T̂_b``
+    (hats = per-bucket dimension maxima — the padded footprint every
+    batched array and operator apply scales with) plus ``overhead *
+    single_bucket_cells`` per bucket beyond the first (the extra-compile
+    cost).  Instances are sorted by their own cell count and the DP
+    finds the optimal contiguous partition of that order, which captures
+    the ragged-sweep structure (shapes grow along sweep axes) without a
+    4-D clustering pass.  Ties prefer fewer buckets; each returned
+    bucket lists its instance indices in ascending submission order.
+    """
+    B = len(problems)
+    if B == 0:
+        raise ValueError("plan_buckets needs at least one instance")
+    dims = np.array([(t.n, t.m, t.D, t.T) for t in problems], np.int64)
+    if max_buckets <= 1 or B == 1:
+        return [list(range(B))]
+    cells = dims.prod(axis=1)
+    order = sorted(range(B), key=lambda i: (int(cells[i]),
+                                            tuple(dims[i]), i))
+    sd = dims[order]  # (B, 4) in planning order
+    single = float(B * sd.max(axis=0).prod())
+    pay = overhead * single
+
+    K = min(max_buckets, B)
+    INF = float("inf")
+    # dp[j] = min padded cells of the first j planned instances split
+    # into exactly k buckets; the last bucket [i, j) has its per-dim
+    # maxima accumulated by walking i downward, so one layer is O(B^2)
+    dp_prev = [0.0] + [INF] * B  # k=0 layer: only 0 instances coverable
+    best_cost, best_k = INF, 1
+    cuts: list[list[int | None]] = []
+    for k in range(1, K + 1):
+        dp: list[float] = [INF] * (B + 1)
+        cut: list[int | None] = [None] * (B + 1)
+        for j in range(k, B + 1):
+            mx = sd[j - 1].copy()
+            for i in range(j - 1, k - 2, -1):
+                np.maximum(mx, sd[i], out=mx)
+                if dp_prev[i] == INF:
+                    continue
+                cand = dp_prev[i] + float((j - i) * mx.prod())
+                if cand < dp[j]:
+                    dp[j] = cand
+                    cut[j] = i
+        cuts.append(cut)
+        total = dp[B] + pay * (k - 1)
+        if total < best_cost:  # strict: exact ties keep fewer buckets
+            best_cost, best_k = total, k
+        dp_prev = dp
+
+    # reconstruct the best_k-bucket partition
+    segs = []
+    j, k = B, best_k
+    while j > 0:
+        i = cuts[k - 1][j]
+        segs.append((i, j))
+        j, k = i, k - 1
+    segs.reverse()
+    return [sorted(order[i:j]) for i, j in segs]
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One shape bucket: submission-order indices + their packed batch."""
+
+    indices: tuple[int, ...]
+    batch: ProblemBatch
+
+    @property
+    def B(self) -> int:
+        return self.batch.B
+
+    @property
+    def shape(self) -> tuple[int, int, int, int]:
+        return self.batch.shape
+
+    @property
+    def cells(self) -> int:
+        """Padded cells of this bucket's batched arrays."""
+        b = self.batch
+        return b.B * b.n * b.m * b.D * b.Tp
+
+    @property
+    def own_cells(self) -> int:
+        return sum(_own_cells(t) for t in self.batch.problems)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackPlan:
+    """A bucketed packing of one fleet: the output of ``FleetEngine.pack``.
+
+    ``buckets[b].indices`` are submission-order instance indices; their
+    concatenation is a permutation of ``range(n_instances)`` (the merge
+    key ``FleetEngine.evaluate`` uses to restore submission order).
+    ``cells_single`` is the padded cell count of legacy single-bucket
+    packing, the baseline every waste metric compares against.
+    """
+
+    buckets: tuple[Bucket, ...]
+    n_instances: int
+    cells_single: int
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def cells_packed(self) -> int:
+        return sum(b.cells for b in self.buckets)
+
+    @property
+    def cells_own(self) -> int:
+        return sum(b.own_cells for b in self.buckets)
+
+    @property
+    def waste_single(self) -> float:
+        """Padded-cell waste fraction of single-bucket packing."""
+        return 1.0 - self.cells_own / max(self.cells_single, 1)
+
+    @property
+    def waste_packed(self) -> float:
+        """Padded-cell waste fraction of this bucketed packing."""
+        return 1.0 - self.cells_own / max(self.cells_packed, 1)
+
+    @property
+    def waste_reduction(self) -> float:
+        """Fraction of single-bucket WASTED cells this plan eliminates."""
+        wasted_single = self.cells_single - self.cells_own
+        wasted_packed = self.cells_packed - self.cells_own
+        if wasted_single <= 0:
+            return 0.0
+        return 1.0 - wasted_packed / wasted_single
+
+    def summary(self) -> dict:
+        return {
+            "buckets": self.n_buckets,
+            "bucket_sizes": [b.B for b in self.buckets],
+            "bucket_shapes": [list(b.shape) for b in self.buckets],
+            "cells_single": int(self.cells_single),
+            "cells_packed": int(self.cells_packed),
+            "cells_own": int(self.cells_own),
+            "waste_frac_single": round(self.waste_single, 4),
+            "waste_frac_bucketed": round(self.waste_packed, 4),
+            "waste_reduction": round(self.waste_reduction, 4),
+        }
+
+
+# --- structured results ----------------------------------------------------
+
+@dataclasses.dataclass
+class FleetResult:
+    """Structured output of ``FleetEngine.evaluate``.
+
+    entries: one §VI protocol dict per instance, in submission order —
+        {'lb', 'costs': {algo: cost}, 'normalized': {algo: cost/lb},
+        'wall_s': {algo: s}} plus a 'solver' telemetry block in tol
+        mode (iters/restarts/kkt/converged per instance).
+    stats: the ``SolveStats`` of each batched LP dispatch (one per
+        bucket shard, or one per warm-started group); empty in legacy
+        fixed-iters mode.
+    plan: the bucketed ``PackPlan`` (None on the warm-sweep path, which
+        packs to one common shape by construction).
+    timings: phase breakdown — pack_s / lp_s / place_s / total_s plus
+        per-bucket lists bucket_lp_s / bucket_place_s.
+    """
+
+    entries: list[dict]
+    stats: list[SolveStats]
+    plan: PackPlan | None
+    timings: dict
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    @property
+    def algos(self) -> tuple[str, ...]:
+        return tuple(self.entries[0]["costs"]) if self.entries else ()
+
+    def costs(self, algo: str) -> list[float]:
+        return [e["costs"][algo] for e in self.entries]
+
+    def to_rows(self) -> list[dict]:
+        """Flat benchmark rows, one per instance (JSON/CSV-ready)."""
+        rows = []
+        for i, e in enumerate(self.entries):
+            row: dict = {"instance": i, "lb": e["lb"]}
+            for algo in e["costs"]:
+                row[f"cost[{algo}]"] = e["costs"][algo]
+                row[f"normalized[{algo}]"] = e["normalized"][algo]
+                row[f"wall_s[{algo}]"] = e["wall_s"][algo]
+            for key, val in e.get("solver", {}).items():
+                row[f"solver.{key}"] = val
+            rows.append(row)
+        return rows
+
+    def to_json(self, indent: int | None = None) -> str:
+        """Whole-result JSON: rows + plan summary + timings + solver
+        aggregates (what the benchmark drivers persist)."""
+        blob = {
+            "entries": self.to_rows(),
+            "timings": self.timings,
+            "plan": self.plan.summary() if self.plan is not None else None,
+            "solver": [s.summary() for s in self.stats],
+        }
+        return json.dumps(blob, indent=indent)
+
+
+# --- the protocol engine ---------------------------------------------------
+
+def _protocol_batched(batch: ProblemBatch, lp_results, algos, fits,
+                      backend: str, check: bool = True) -> list[dict]:
+    """Batched placement protocol: every (mapping, fit, filling) combo of
+    every algorithm runs as ONE lockstep ``place_many`` over the grid."""
+    from .api import rightsize
+
+    B = batch.B
+    out = [{"lb": res.lower_bound, "costs": {}, "normalized": {},
+            "wall_s": {}} for res in lp_results]
+    for algo in algos:
+        t0 = time.perf_counter()
+        filling = algo.endswith("-f")
+        if algo in ("penalty-map", "penalty-map-f"):
+            mapsets = [[penalty_map(t, kind) for t in batch.problems]
+                       for kind in ("avg", "max")]
+        elif algo in ("lp-map", "lp-map-f"):
+            mapsets = [[res.mapping for res in lp_results]]
+        else:
+            # extended algos (e.g. "+ls") keep the per-instance path
+            for b, t in enumerate(batch.problems):
+                sol = rightsize(t, algo, backend=backend,
+                                lp_result=lp_results[b], check=check)
+                out[b]["costs"][algo] = sol.cost(t)
+                out[b]["wall_s"][algo] = sol.meta["wall_s"]
+            continue
+        best: list[Solution | None] = [None] * B
+        best_cost = [float("inf")] * B
+        for maps in mapsets:
+            for fit in fits:
+                sols = place_many(batch, maps, fit=fit, filling=filling,
+                                  backend=backend, meta={"algo": algo})
+                for b, (t, s) in enumerate(zip(batch.problems, sols)):
+                    c = s.cost(t)
+                    if c < best_cost[b]:
+                        best_cost[b], best[b] = c, s
+        wall = (time.perf_counter() - t0) / B
+        for b, t in enumerate(batch.problems):
+            if check:
+                verify(t, best[b])
+            out[b]["costs"][algo] = best_cost[b]
+            out[b]["wall_s"][algo] = wall
+    for entry in out:
+        lb = max(entry["lb"], 1e-12)
+        entry["normalized"] = {a: c / lb
+                               for a, c in entry["costs"].items()}
+    return out
+
+
+class FleetEngine:
+    """One configured fleet-evaluation session (the §VI protocol at
+    fleet scale): ``pack`` plans the shape buckets, ``solve`` runs the
+    mapping-LP phase, ``place`` runs one greedy placement pass, and
+    ``evaluate`` runs the whole protocol into a ``FleetResult``.
+
+        engine = FleetEngine(
+            solver=SolverConfig(tol=5e-3, iters=4000),
+            sweep=SweepConfig(max_buckets=4),
+        )
+        result = engine.evaluate(problems)
+        result.entries[0]["normalized"]       # cost / LP lower bound
+        result.plan.summary()                 # bucket shapes + waste
+        result.to_rows()                      # flat benchmark rows
+
+    The legacy ``evaluate_many`` kwargs map onto the configs one-to-one
+    (see the README migration table); with the default single-bucket
+    ``SweepConfig`` the engine executes exactly the legacy code path,
+    so golden tables are bit-stable under the shim.
+    """
+
+    def __init__(self, solver: SolverConfig | None = None,
+                 placement: PlacementConfig | None = None,
+                 sweep: SweepConfig | None = None,
+                 algos=ALGORITHMS):
+        self.solver = solver if solver is not None else SolverConfig()
+        self.placement = placement if placement is not None \
+            else PlacementConfig()
+        self.sweep = sweep if sweep is not None else SweepConfig()
+        self.algos = tuple(algos)
+        if self.sweep.warm_start is not None and self.solver.tol is None:
+            raise ValueError(
+                "warm_start requires a tolerance-stopped solver "
+                "(SolverConfig(tol=...)); fixed-iteration solves gain "
+                "nothing from a warm start")
+        if self.placement.engine == "loop" and self.placement.fit != "best":
+            raise ValueError(
+                "the per-instance 'loop' placement engine always scans "
+                "every fit policy (the legacy protocol); narrowing "
+                "PlacementConfig.fit requires engine='batched'")
+
+    # -- phase 0: pack -------------------------------------------------
+
+    def pack(self, problems) -> PackPlan:
+        """Trim, bucket (``plan_buckets``), and pad-and-stack a fleet.
+
+        A pre-packed ``ProblemBatch`` passes through as one bucket (its
+        padding is taken as-is, so bucketing never re-pads a batch the
+        caller already laid out)."""
+        if isinstance(problems, ProblemBatch):
+            bucket = Bucket(indices=tuple(range(problems.B)),
+                            batch=problems)
+            return PackPlan(buckets=(bucket,), n_instances=problems.B,
+                            cells_single=bucket.cells)
+        trimmed = [trim_timeline(p)[0] for p in problems]
+        if not trimmed:
+            raise ValueError("FleetEngine.pack needs at least one instance")
+        parts = plan_buckets(trimmed, max_buckets=self.sweep.max_buckets,
+                             overhead=self.sweep.bucket_overhead)
+        buckets = tuple(
+            Bucket(indices=tuple(idx),
+                   batch=pack_problems([trimmed[i] for i in idx],
+                                       assume_trimmed=True))
+            for idx in parts)
+        n_hat = max(t.n for t in trimmed)
+        m_hat = max(t.m for t in trimmed)
+        d_hat = max(t.D for t in trimmed)
+        t_hat = max(t.T for t in trimmed)
+        return PackPlan(
+            buckets=buckets, n_instances=len(trimmed),
+            cells_single=len(trimmed) * n_hat * m_hat * d_hat * t_hat)
+
+    # -- phase 1: the mapping-LP solve ---------------------------------
+
+    def _solve_batch(self, batch: ProblemBatch, init=None):
+        """One LP dispatch under ``self.solver`` -> (results, [stats])."""
+        cfg = self.solver
+        if cfg.tol is None:
+            res = solve_lp_many(batch, iters=cfg.iters,
+                                step_scale=cfg.step_scale,
+                                operator=cfg.operator)
+            return res, []
+        res, st = solve_lp_many(
+            batch, iters=cfg.iters, step_scale=cfg.step_scale,
+            operator=cfg.operator, tol=cfg.tol, adaptive=cfg.adaptive,
+            restart=cfg.restart, check_every=cfg.check_every, init=init,
+            full_output=True)
+        return res, [st]
+
+    def _solve_bucket(self, bucket: Bucket):
+        """Solve one bucket, sharded to ``sweep.shard_size`` instances
+        per dispatch (shards share the bucket's padded shape, so every
+        full shard reuses one compile and results are unchanged)."""
+        shard = self.sweep.shard_size
+        batch = bucket.batch
+        if shard is None or batch.B <= shard:
+            return self._solve_batch(batch)
+        shape = batch.shape
+        results: list[PDHGResult] = []
+        stats: list[SolveStats] = []
+        for i in range(0, batch.B, shard):
+            sub = pack_problems(batch.problems[i : i + shard],
+                                pad_to=shape, assume_trimmed=True)
+            res, st = self._solve_batch(sub)
+            results.extend(res)
+            stats.extend(st)
+        return results, stats
+
+    def solve(self, problems):
+        """Mapping-LP phase only: ``(results, stats)`` with one
+        ``PDHGResult`` per instance in submission order.  Accepts a
+        problem sequence, a ``ProblemBatch``, or a ``PackPlan``."""
+        if self.sweep.warm_start is not None:
+            trimmed = self._trimmed(problems)
+            return self._solve_warm(trimmed)
+        plan = problems if isinstance(problems, PackPlan) \
+            else self.pack(problems)
+        results: list[PDHGResult | None] = [None] * plan.n_instances
+        stats: list[SolveStats] = []
+        for bucket in plan.buckets:
+            res, st = self._solve_bucket(bucket)
+            for i, r in zip(bucket.indices, res):
+                results[i] = r
+            stats.extend(st)
+        return results, stats
+
+    def _trimmed(self, problems) -> list[Problem]:
+        if isinstance(problems, ProblemBatch):
+            return list(problems.problems)
+        if isinstance(problems, PackPlan):
+            raise ValueError(
+                "warm-started sweeps take the problem sequence itself "
+                "(grid-adjacent order), not a PackPlan")
+        return [trim_timeline(p)[0] for p in problems]
+
+    def _solve_warm(self, trimmed: list[Problem]):
+        """Warm-started sweep chain (``solve_lp_sweep``) over
+        consecutive groups of ``sweep.warm_start`` instances.  When the
+        group size does not divide B the trailing group is smaller and
+        cold-starts (its lanes no longer align with the predecessor
+        state) — that is documented behavior, not an error."""
+        cfg, k = self.solver, self.sweep.warm_start
+        groups = [trimmed[i : i + k] for i in range(0, len(trimmed), k)]
+        return solve_lp_sweep(
+            groups, tol=cfg.tol, iters=cfg.iters,
+            step_scale=cfg.step_scale, operator=cfg.operator,
+            adaptive=cfg.adaptive, restart=cfg.restart,
+            check_every=cfg.check_every)
+
+    # -- phase 2: greedy placement -------------------------------------
+
+    def place(self, problems, mappings, fit: str | None = None,
+              filling: bool | None = None) -> list[Solution]:
+        """One placement pass of given mappings under
+        ``self.placement`` (fit/filling overridable per call; fit
+        defaults to the config's policy, or 'first' under 'best')."""
+        if isinstance(problems, PackPlan):
+            raise ValueError(
+                "place() takes a problem sequence or a ProblemBatch "
+                "(mappings align with submission order), not a PackPlan")
+        cfg = self.placement
+        fit = fit if fit is not None else (
+            "first" if cfg.fit == "best" else cfg.fit)
+        filling = cfg.filling if filling is None else filling
+        if cfg.engine == "loop":
+            trimmed = self._trimmed(problems)
+            return [two_phase(t, mp, fit=fit, filling=filling,
+                              backend=cfg.backend)
+                    for t, mp in zip(trimmed, mappings)]
+        batch = problems if isinstance(problems, ProblemBatch) \
+            else pack_problems(self._trimmed(problems),
+                               assume_trimmed=True)
+        return place_many(batch, mappings, fit=fit, filling=filling,
+                          backend=cfg.backend)
+
+    def _evaluate_bucket(self, batch: ProblemBatch, lp_results):
+        """§VI protocol entries for one packed bucket."""
+        cfg = self.placement
+        if cfg.engine == "batched":
+            return _protocol_batched(batch, lp_results, self.algos,
+                                     cfg.fits, cfg.backend,
+                                     check=cfg.check)
+        from .api import _protocol_entry
+
+        return [_protocol_entry(t, res, res.lower_bound, self.algos,
+                                cfg.backend)
+                for t, res in zip(batch.problems, lp_results)]
+
+    # -- the full protocol ---------------------------------------------
+
+    def evaluate(self, problems) -> FleetResult:
+        """§VI protocol over a fleet: bucketed pack -> per-bucket LP
+        solve -> per-bucket lockstep placement -> entries merged back
+        into submission order, as a ``FleetResult``."""
+        t_start = time.perf_counter()
+        if self.sweep.warm_start is not None:
+            return self._evaluate_warm(problems, t_start)
+        t0 = time.perf_counter()
+        plan = problems if isinstance(problems, PackPlan) \
+            else self.pack(problems)
+        pack_s = time.perf_counter() - t0
+
+        entries: list[dict | None] = [None] * plan.n_instances
+        stats: list[SolveStats] = []
+        bucket_lp_s, bucket_place_s = [], []
+        for bucket in plan.buckets:
+            t0 = time.perf_counter()
+            lp_results, st = self._solve_bucket(bucket)
+            bucket_lp_s.append(time.perf_counter() - t0)
+            stats.extend(st)
+            t0 = time.perf_counter()
+            part = self._evaluate_bucket(bucket.batch, lp_results)
+            bucket_place_s.append(time.perf_counter() - t0)
+            if self.solver.tol is not None:
+                self._attach_solver(part, lp_results)
+            for i, entry in zip(bucket.indices, part):
+                entries[i] = entry
+        timings = {
+            "pack_s": pack_s,
+            "lp_s": sum(bucket_lp_s),
+            "place_s": sum(bucket_place_s),
+            "bucket_lp_s": bucket_lp_s,
+            "bucket_place_s": bucket_place_s,
+            "total_s": time.perf_counter() - t_start,
+        }
+        return FleetResult(entries=entries, stats=stats, plan=plan,
+                           timings=timings)
+
+    def _evaluate_warm(self, problems, t_start: float) -> FleetResult:
+        """The warm-started sweep path: one chained LP solve, then one
+        single-shape placement pass over the whole grid."""
+        trimmed = self._trimmed(problems)
+        t0 = time.perf_counter()
+        lp_results, stats = self._solve_warm(trimmed)
+        lp_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        batch = problems if isinstance(problems, ProblemBatch) \
+            else pack_problems(trimmed, assume_trimmed=True)
+        pack_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        entries = self._evaluate_bucket(batch, lp_results)
+        place_s = time.perf_counter() - t0
+        self._attach_solver(entries, lp_results)
+        timings = {
+            "pack_s": pack_s, "lp_s": lp_s, "place_s": place_s,
+            "bucket_lp_s": [lp_s], "bucket_place_s": [place_s],
+            "total_s": time.perf_counter() - t_start,
+        }
+        return FleetResult(entries=entries, stats=stats, plan=None,
+                           timings=timings)
+
+    @staticmethod
+    def _attach_solver(entries, lp_results):
+        for entry, res in zip(entries, lp_results):
+            entry["solver"] = {"iters": res.iters,
+                               "restarts": res.restarts,
+                               "kkt": res.kkt,
+                               "converged": res.converged}

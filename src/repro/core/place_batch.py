@@ -404,6 +404,9 @@ def place_many(problems, mappings, fit: str = "first",
     """
     if fit not in FIT_POLICIES:
         raise ValueError(f"fit must be one of {FIT_POLICIES}")
+    if backend not in ("numpy", "kernel"):
+        raise ValueError(
+            f"backend must be 'numpy'|'kernel', got {backend!r}")
     batch = problems if isinstance(problems, ProblemBatch) \
         else pack_problems(problems)
     if len(mappings) != batch.B:

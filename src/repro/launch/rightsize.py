@@ -2,19 +2,25 @@
 capacity-planning layer.
 
     python -m repro.launch.rightsize [--dryrun-dir results/dryrun] \
-        [--algo lp-map-f] [--compare]
+        [--algo lp-map-f] [--compare] [--fleet N]
 
 Builds the TL-Rightsizing instance from the job schedule (demands measured
 from dry-run artifacts when present), purchases a minimum-cost fleet of
 TPU slices, and prints the plan.  --compare runs all four paper algorithms
-plus the timeline-agnostic lower bound (§VI-F).
+plus the timeline-agnostic lower bound (§VI-F).  --fleet N evaluates N
+demand-scaled what-if scenarios (0.5x .. 1.5x utilization) through ONE
+``FleetEngine`` session — the paper's protocol as a provisioning
+*service* answering a batch of capacity questions in one fused solve —
+and prints the $/day frontier per scenario.
 """
 
 from __future__ import annotations
 
 import argparse
 import collections
+import dataclasses
 
+import numpy as np
 
 from repro.core import (
     evaluate,
@@ -25,17 +31,56 @@ from repro.core import (
 from repro.workload.jobs import DEFAULT_SCHEDULE, fleet_problem
 
 
+def run_fleet(problem, n_scenarios: int) -> None:
+    """Evaluate demand-scaled scenario variants in one FleetEngine
+    session: every scenario's mapping LP solves in one fused batch and
+    every greedy placement advances in lockstep."""
+    from repro.core import FleetEngine, SolverConfig, SweepConfig
+
+    cap_max = problem.node_types.cap.max(axis=0)
+    factors = np.linspace(0.5, 1.5, n_scenarios)
+    # clamp per-task demand to the largest SKU so every scenario stays
+    # placeable (a job can never need more than one full slice here)
+    scenarios = [dataclasses.replace(
+        problem, dem=np.minimum(problem.dem * f, cap_max))
+        for f in factors]
+    engine = FleetEngine(
+        solver=SolverConfig(iters=1500),
+        sweep=SweepConfig(max_buckets=4),
+        algos=("penalty-map-f", "lp-map-f"),
+    )
+    result = engine.evaluate(scenarios)
+    t = result.timings
+    print(f"== fleet scenarios ({n_scenarios} demand scalings, one "
+          f"FleetEngine session) ==")
+    print(f"   lp {t['lp_s']:.1f}s + placement {t['place_s']:.1f}s over "
+          f"{result.plan.n_buckets} shape bucket(s)\n")
+    print(f"{'demand x':>9s} {'penalty-map-f $/day':>20s} "
+          f"{'lp-map-f $/day':>15s} {'x LB':>6s}")
+    for f, e in zip(factors, result.entries):
+        cost = e["costs"]["lp-map-f"]
+        print(f"{f:9.2f} {e['costs']['penalty-map-f']*24:20,.2f} "
+              f"{cost*24:15,.2f} {e['normalized']['lp-map-f']:6.3f}")
+
+
 def run(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun-dir", default="results/dryrun")
     ap.add_argument("--algo", default="lp-map-f")
     ap.add_argument("--compare", action="store_true")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="evaluate N demand-scaled scenarios through one "
+                         "FleetEngine session instead of a single plan")
     args = ap.parse_args(argv)
 
     problem, tasks = fleet_problem(DEFAULT_SCHEDULE, args.dryrun_dir)
     measured = sum(1 for t in tasks if t["source"] == "dryrun")
     print(f"jobs -> {problem.n} tasks ({measured} demand vectors measured "
           f"from dry-run artifacts), {problem.m} slice SKUs, T=24h\n")
+
+    if args.fleet:
+        run_fleet(problem, args.fleet)
+        return None
 
     trimmed, _ = trim_timeline(problem)
     if args.compare:
