@@ -1,0 +1,146 @@
+"""Docs health gate (CI fast tier).
+
+    PYTHONPATH=src python -m benchmarks.check_docs [--skip-snippets]
+
+Three checks, any failure exits nonzero:
+
+  1. **Doctests** — runs ``doctest.testmod`` over the audited public
+     surface (``FleetEngine`` + the typed configs, the ``evaluate`` /
+     ``evaluate_many`` shims, ``place_many``, the kernel wrappers), so
+     every usage example in those docstrings stays runnable.
+  2. **README snippets** — extracts the fenced ```python blocks from
+     README.md and executes them top to bottom in one namespace; the
+     quickstarts must keep working as written.
+  3. **Intra-repo links** — scans ``docs/*.md`` and README.md for
+     markdown links; every relative link must resolve to an existing
+     file, and every ``#anchor`` (same-file or cross-file) must match
+     a heading in its target (GitHub slug rules: lowercase, punctuation
+     stripped, spaces to hyphens).
+
+Docs are part of the product surface: a broken example or a dangling
+link is a CI failure, not a docs chore.
+"""
+
+from __future__ import annotations
+
+import argparse
+import doctest
+import importlib
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# The audited public surface: modules whose docstring examples the
+# docs/ suite leans on.  Modules without doctests pass trivially.
+AUDITED_MODULES = (
+    "repro.core.engine",
+    "repro.core.api",
+    "repro.core.place_batch",
+    "repro.core.place_step",
+    "repro.core.batch",
+    "repro.kernels.ops",
+)
+
+SNIPPET_FILES = ("README.md",)
+LINK_FILES = ("README.md", "docs")
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def run_doctests() -> int:
+    failures = 0
+    flags = doctest.ELLIPSIS | doctest.NORMALIZE_WHITESPACE
+    for name in AUDITED_MODULES:
+        mod = importlib.import_module(name)
+        result = doctest.testmod(mod, optionflags=flags, verbose=False)
+        label = f"doctest {name}: {result.attempted} examples"
+        if result.failed:
+            print(f"FAIL {label}, {result.failed} failed")
+            failures += result.failed
+        else:
+            print(f"ok   {label}")
+    return failures
+
+
+def run_snippets() -> int:
+    failures = 0
+    for rel in SNIPPET_FILES:
+        text = (REPO / rel).read_text()
+        ns: dict = {}
+        for i, block in enumerate(FENCE_RE.findall(text)):
+            try:
+                exec(compile(block, f"{rel}[python block {i}]", "exec"),
+                     ns)
+                print(f"ok   snippet {rel}[{i}] "
+                      f"({len(block.splitlines())} lines)")
+            except Exception as exc:  # noqa: BLE001 - report and gate
+                print(f"FAIL snippet {rel}[{i}]: {exc!r}")
+                failures += 1
+    return failures
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug of one markdown heading."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading.strip().lower())
+    text = re.sub(r"[^a-z0-9 _\-]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors(path: pathlib.Path) -> set[str]:
+    return {_slug(h) for h in HEADING_RE.findall(path.read_text())}
+
+
+def check_links() -> int:
+    files: list[pathlib.Path] = []
+    for rel in LINK_FILES:
+        p = REPO / rel
+        files.extend(sorted(p.glob("*.md")) if p.is_dir() else [p])
+    failures = 0
+    for md in files:
+        rel_md = md.relative_to(REPO)
+        n_checked = 0
+        for target in LINK_RE.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = md if not path_part \
+                else (md.parent / path_part).resolve()
+            if not dest.exists():
+                print(f"FAIL link {rel_md}: {target} "
+                      f"(missing file {path_part})")
+                failures += 1
+                continue
+            if anchor and dest.suffix == ".md" \
+                    and anchor not in _anchors(dest):
+                print(f"FAIL link {rel_md}: {target} "
+                      f"(no heading for #{anchor})")
+                failures += 1
+                continue
+            n_checked += 1
+        print(f"ok   links {rel_md}: {n_checked} intra-repo links")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-snippets", action="store_true",
+                    help="skip executing the README python blocks "
+                         "(doctests and links still run)")
+    args = ap.parse_args(argv)
+    failures = run_doctests()
+    if not args.skip_snippets:
+        failures += run_snippets()
+    failures += check_links()
+    if failures:
+        print(f"docs check: {failures} failure(s)")
+        return 1
+    print("docs check: all green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,11 +47,12 @@ def main(argv=None) -> None:
     ap.add_argument("--lp", choices=["pdhg", "highs"], default="pdhg",
                     help="LP backend: batched PDHG sweep engine (one "
                          "solve per table) or per-instance exact HiGHS")
-    ap.add_argument("--placement", choices=["batched", "loop"],
+    ap.add_argument("--placement", choices=["batched", "compiled", "loop"],
                     default="batched",
-                    help="greedy placement phase: lockstep batched "
-                         "engine (place_many) or the per-instance "
-                         "two_phase loop (identical placements)")
+                    help="greedy placement phase: numpy lockstep engine "
+                         "(place_many), the compiled on-device stepper "
+                         "(place_step), or the per-instance two_phase "
+                         "loop (identical placements all three ways)")
     ap.add_argument("--lp-tol", type=float, default=None,
                     help="normalized-duality-gap stopping tolerance of "
                          "the PDHG LP phase (default: the scale's "

@@ -16,6 +16,17 @@ solve + lockstep placements, the typed-config API from
 ``repro.core.engine``):
 
     PYTHONPATH=src python examples/rightsize_fleet.py --fleet 8
+
+The --fleet banner prints the session's per-phase timings and the
+placement-stepper telemetry from ``FleetResult.timings`` (which
+engine placed, how many phase waves / device dispatches, fallbacks) —
+the "read the telemetry" walkthrough referenced by
+docs/benchmarks.md.  Pass ``--placement compiled`` to route the
+greedy phase through the compiled on-device stepper (placements are
+identical either way):
+
+    PYTHONPATH=src python examples/rightsize_fleet.py --fleet 8 \
+        --placement compiled
 """
 
 import sys

@@ -1,6 +1,6 @@
 """TL-Rightsizing core (the paper's contribution).
 
-Public API:
+Public API (the surface docs/architecture.md documents):
     Problem, NodeTypes, Solution        — data model
     rightsize, evaluate                 — solve / paper-protocol evaluation
     FleetEngine, SolverConfig,
@@ -8,9 +8,12 @@ Public API:
     FleetResult, PackPlan, plan_buckets — structured results + bucketing
     evaluate_many                       — legacy kwarg shim over FleetEngine
     solve_lp_many, pack_problems        — batched fleet-sweep LP engine
-    place_many                          — batched lockstep placement engine
+    place_many                          — lockstep placement engine
+                                          (placement='compiled' routes it
+                                          through the on-device stepper,
+                                          core.place_step)
     penalty_map, lp_map, solve_lp       — mapping strategies
-    two_phase                           — placement engine
+    two_phase                           — per-instance placement engine
     lp_lowerbound, congestion_lowerbound, no_timeline_lowerbound
 """
 

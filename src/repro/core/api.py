@@ -161,8 +161,11 @@ def evaluate_many(problems, algos=ALGORITHMS, backend: str = "numpy",
     compiled ``solve_lp_many`` call for the whole grid, and (with
     ``placement='batched'``, the default) the greedy placement phase
     advances all instances in lockstep through ``place_many``.
+    ``placement='compiled'`` routes that lockstep through the on-device
+    ``lax.scan`` stepper (``core.place_step``; one device dispatch per
+    node-type phase instead of one numpy dispatch per step), and
     ``placement='loop'`` restores the per-instance placement loop;
-    placements (and therefore costs) are identical either way.
+    placements (and therefore costs) are identical all three ways.
 
     Every kwarg maps onto one typed-config field (see the README
     migration table): ``lp_iters/operator/lp_tol/lp_adaptive/lp_restart``
@@ -195,6 +198,17 @@ def evaluate_many(problems, algos=ALGORITHMS, backend: str = "numpy",
     iteration telemetry loses the warm-start advantage.
     ``return_stats=True`` additionally returns the ``SolveStats`` list
     (one per batched solve / warm-started group).
+
+    >>> from repro.workload import SyntheticSpec, synthetic_instance
+    >>> grid = [synthetic_instance(SyntheticSpec(n=8, m=2, D=2, T=5,
+    ...                                          seed=s))
+    ...         for s in (0, 1)]
+    >>> entries = evaluate_many(grid, algos=("penalty-map",),
+    ...                         lp_iters=30)
+    >>> sorted(entries[0])
+    ['costs', 'lb', 'normalized', 'wall_s']
+    >>> list(entries[1]["costs"])
+    ['penalty-map']
     """
     from .engine import (FleetEngine, PlacementConfig, SolverConfig,
                          SweepConfig)

@@ -9,9 +9,9 @@ object:
 
   * ``SolverConfig``    — LP phase: stopping regime (tol/iters), the
                           adaptive/restart machinery, operator form.
-  * ``PlacementConfig`` — greedy phase: lockstep vs per-instance engine,
-                          fit-policy scan, filling override, scoring
-                          backend.
+  * ``PlacementConfig`` — greedy phase: numpy-lockstep vs compiled
+                          on-device vs per-instance engine, fit-policy
+                          scan, filling override, scoring backend.
   * ``SweepConfig``     — fleet shape: shape-bucketed packing (this
                           module's planner), warm-started sweep
                           chaining, shard size of the LP dispatch.
@@ -63,8 +63,11 @@ __all__ = [
 ]
 
 _OPERATORS = ("auto", "dense", "cumsum", "pallas")
-_PLACEMENT_ENGINES = ("batched", "loop")
+_PLACEMENT_ENGINES = ("batched", "compiled", "loop")
 _PLACEMENT_BACKENDS = ("numpy", "kernel")
+# PlacementConfig.engine -> place_many stepper name ('loop' bypasses
+# place_many entirely)
+_ENGINE_STEPPER = {"batched": "lockstep", "compiled": "compiled"}
 
 # Planner cost of one extra shape bucket (one extra XLA compile of the
 # fused stepper), expressed as a fraction of the single-bucket padded
@@ -86,6 +89,15 @@ class SolverConfig:
     ``restart`` ablate the PDLP machinery; ``operator`` picks the
     congestion-operator form; ``check_every`` is the tol-mode
     convergence-check cadence (iteration telemetry quantizes to it).
+
+    >>> SolverConfig().tol is None        # legacy fixed-iteration mode
+    True
+    >>> SolverConfig(tol=5e-3).check_every == DEFAULT_CHECK_EVERY
+    True
+    >>> SolverConfig(iters=0)
+    Traceback (most recent call last):
+        ...
+    ValueError: iters must be >= 1, got 0
     """
 
     tol: float | None = None
@@ -116,16 +128,32 @@ class SolverConfig:
 class PlacementConfig:
     """Greedy placement phase configuration.
 
-    engine='batched' advances all instances in lockstep
-    (``place_many``); 'loop' restores the per-instance ``two_phase``
-    loop (placements and costs are identical either way).  fit='best'
-    scans every fit policy and keeps the per-instance minimum (the
-    paper's §VI protocol); a concrete policy ('first'/'similarity')
-    narrows the scan.  ``filling`` only applies to direct
-    ``FleetEngine.place`` calls (the protocol derives filling from the
-    algorithm name); ``backend`` routes the scoring pass ('kernel' =
-    the batch-dim-aware Pallas fit kernel).  ``check`` verifies every
-    returned placement against the instance constraints.
+    engine='batched' advances all instances in lockstep through the
+    vectorized-numpy stepper (``place_many``); 'compiled' routes the
+    same lockstep through the on-device ``lax.scan`` stepper
+    (``place_step``) so the host dispatches once per node-type phase
+    boundary — or once per *call* without filling — instead of once
+    per placement step (oversized pools fall back to the numpy
+    stepper); 'loop' restores the per-instance ``two_phase`` loop.
+    Placements and costs are identical across all three engines.
+    fit='best' scans every fit policy and keeps the per-instance
+    minimum (the paper's §VI protocol); a concrete policy
+    ('first'/'similarity') narrows the scan.  ``filling`` only applies
+    to direct ``FleetEngine.place`` calls (the protocol derives
+    filling from the algorithm name); ``backend`` routes the numpy
+    stepper's scoring pass ('kernel' = the batch-dim-aware Pallas fit
+    kernel; the compiled stepper always scores on-device).  ``check``
+    verifies every returned placement against the instance
+    constraints.
+
+    >>> PlacementConfig().engine
+    'batched'
+    >>> PlacementConfig(engine="compiled", fit="similarity").fits
+    ('similarity',)
+    >>> PlacementConfig(engine="warp")
+    Traceback (most recent call last):
+        ...
+    ValueError: placement engine must be one of ('batched', 'compiled', 'loop'), got 'warp'
     """
 
     engine: str = "batched"
@@ -172,6 +200,14 @@ class SweepConfig:
     warm_start and max_buckets > 1 are mutually exclusive: the warm
     chain packs every group to one common shape so primal/dual states
     carry over lane-for-lane, which is the opposite trade of bucketing.
+
+    >>> (SweepConfig(max_buckets=4).bucket_overhead
+    ...  == DEFAULT_BUCKET_OVERHEAD)
+    True
+    >>> SweepConfig(warm_start=2, max_buckets=3)
+    Traceback (most recent call last):
+        ...
+    ValueError: warm_start and max_buckets > 1 are mutually exclusive: ...
     """
 
     warm_start: int | None = None
@@ -382,7 +418,20 @@ class FleetResult:
     plan: the bucketed ``PackPlan`` (None on the warm-sweep path, which
         packs to one common shape by construction).
     timings: phase breakdown — pack_s / lp_s / place_s / total_s plus
-        per-bucket lists bucket_lp_s / bucket_place_s.
+        per-bucket lists bucket_lp_s / bucket_place_s and a
+        ``placement`` block (which placement engine ran, stepper calls
+        and waves, summed per-wave seconds; for the compiled stepper
+        also device-dispatch counts, execution modes, and fallbacks).
+
+    >>> r = FleetResult(
+    ...     entries=[{"lb": 1.0, "costs": {"lp-map": 2.0},
+    ...               "normalized": {"lp-map": 2.0},
+    ...               "wall_s": {"lp-map": 0.1}}],
+    ...     stats=[], plan=None, timings={})
+    >>> r.algos, r.costs("lp-map")
+    (('lp-map',), [2.0])
+    >>> r.to_rows()[0]["cost[lp-map]"]
+    2.0
     """
 
     entries: list[dict]
@@ -429,9 +478,13 @@ class FleetResult:
 # --- the protocol engine ---------------------------------------------------
 
 def _protocol_batched(batch: ProblemBatch, lp_results, algos, fits,
-                      backend: str, check: bool = True) -> list[dict]:
+                      backend: str, check: bool = True,
+                      stepper: str = "lockstep",
+                      tels: list | None = None) -> list[dict]:
     """Batched placement protocol: every (mapping, fit, filling) combo of
-    every algorithm runs as ONE lockstep ``place_many`` over the grid."""
+    every algorithm runs as ONE lockstep ``place_many`` over the grid
+    (through the ``stepper`` of the configured placement engine);
+    per-call stepper telemetry is appended to ``tels``."""
     from .api import rightsize
 
     B = batch.B
@@ -457,8 +510,12 @@ def _protocol_batched(batch: ProblemBatch, lp_results, algos, fits,
         best_cost = [float("inf")] * B
         for maps in mapsets:
             for fit in fits:
+                tel: dict = {}
                 sols = place_many(batch, maps, fit=fit, filling=filling,
-                                  backend=backend, meta={"algo": algo})
+                                  backend=backend, meta={"algo": algo},
+                                  placement=stepper, telemetry=tel)
+                if tels is not None:
+                    tels.append(tel)
                 for b, (t, s) in enumerate(zip(batch.problems, sols)):
                     c = s.cost(t)
                     if c < best_cost[b]:
@@ -476,6 +533,24 @@ def _protocol_batched(batch: ProblemBatch, lp_results, algos, fits,
     return out
 
 
+def _placement_telemetry(engine: str, tels: list) -> dict:
+    """Aggregate per-call stepper telemetry into the ``FleetResult``
+    timings block: which stepper actually ran, how many device
+    dispatches the compiled stepper issued, how often it fell back,
+    and the summed per-phase (wave) seconds."""
+    out: dict = {"engine": engine, "calls": len(tels)}
+    if engine == "loop" or not tels:
+        return out
+    out["waves"] = max((t.get("waves", 0) for t in tels), default=0)
+    out["wave_s_total"] = sum(sum(t.get("wave_s", ())) for t in tels)
+    if engine == "compiled":
+        out["dispatches"] = sum(t.get("dispatches", 0) for t in tels)
+        out["fallbacks"] = sum(1 for t in tels
+                               if t.get("engine") != "compiled")
+        out["modes"] = sorted({t["mode"] for t in tels if "mode" in t})
+    return out
+
+
 class FleetEngine:
     """One configured fleet-evaluation session (the §VI protocol at
     fleet scale): ``pack`` plans the shape buckets, ``solve`` runs the
@@ -490,11 +565,26 @@ class FleetEngine:
         result.entries[0]["normalized"]       # cost / LP lower bound
         result.plan.summary()                 # bucket shapes + waste
         result.to_rows()                      # flat benchmark rows
+        result.timings["placement"]           # stepper telemetry
 
     The legacy ``evaluate_many`` kwargs map onto the configs one-to-one
-    (see the README migration table); with the default single-bucket
-    ``SweepConfig`` the engine executes exactly the legacy code path,
-    so golden tables are bit-stable under the shim.
+    (see docs/architecture.md for the migration table); with the
+    default single-bucket ``SweepConfig`` the engine executes exactly
+    the legacy code path, so golden tables are bit-stable under the
+    shim.
+
+    >>> from repro.core import FleetEngine, SolverConfig
+    >>> from repro.workload import SyntheticSpec, synthetic_instance
+    >>> fleet = [synthetic_instance(SyntheticSpec(n=10, m=2, D=2, T=6,
+    ...                                           seed=s))
+    ...          for s in (0, 1)]
+    >>> engine = FleetEngine(solver=SolverConfig(iters=40),
+    ...                      algos=("penalty-map",))
+    >>> result = engine.evaluate(fleet)
+    >>> len(result), result.algos
+    (2, ('penalty-map',))
+    >>> result.timings["placement"]["engine"]
+    'batched'
     """
 
     def __init__(self, solver: SolverConfig | None = None,
@@ -649,15 +739,19 @@ class FleetEngine:
             else pack_problems(self._trimmed(problems),
                                assume_trimmed=True)
         return place_many(batch, mappings, fit=fit, filling=filling,
-                          backend=cfg.backend)
+                          backend=cfg.backend,
+                          placement=_ENGINE_STEPPER[cfg.engine])
 
-    def _evaluate_bucket(self, batch: ProblemBatch, lp_results):
+    def _evaluate_bucket(self, batch: ProblemBatch, lp_results,
+                         tels: list | None = None):
         """§VI protocol entries for one packed bucket."""
         cfg = self.placement
-        if cfg.engine == "batched":
+        if cfg.engine in _ENGINE_STEPPER:
             return _protocol_batched(batch, lp_results, self.algos,
                                      cfg.fits, cfg.backend,
-                                     check=cfg.check)
+                                     check=cfg.check,
+                                     stepper=_ENGINE_STEPPER[cfg.engine],
+                                     tels=tels)
         from .api import _protocol_entry
 
         return [_protocol_entry(t, res, res.lower_bound, self.algos,
@@ -681,13 +775,15 @@ class FleetEngine:
         entries: list[dict | None] = [None] * plan.n_instances
         stats: list[SolveStats] = []
         bucket_lp_s, bucket_place_s = [], []
+        tels: list[dict] = []
         for bucket in plan.buckets:
             t0 = time.perf_counter()
             lp_results, st = self._solve_bucket(bucket)
             bucket_lp_s.append(time.perf_counter() - t0)
             stats.extend(st)
             t0 = time.perf_counter()
-            part = self._evaluate_bucket(bucket.batch, lp_results)
+            part = self._evaluate_bucket(bucket.batch, lp_results,
+                                         tels=tels)
             bucket_place_s.append(time.perf_counter() - t0)
             if self.solver.tol is not None:
                 self._attach_solver(part, lp_results)
@@ -699,6 +795,8 @@ class FleetEngine:
             "place_s": sum(bucket_place_s),
             "bucket_lp_s": bucket_lp_s,
             "bucket_place_s": bucket_place_s,
+            "placement": _placement_telemetry(self.placement.engine,
+                                              tels),
             "total_s": time.perf_counter() - t_start,
         }
         return FleetResult(entries=entries, stats=stats, plan=plan,
@@ -716,12 +814,15 @@ class FleetEngine:
             else pack_problems(trimmed, assume_trimmed=True)
         pack_s = time.perf_counter() - t0
         t0 = time.perf_counter()
-        entries = self._evaluate_bucket(batch, lp_results)
+        tels: list[dict] = []
+        entries = self._evaluate_bucket(batch, lp_results, tels=tels)
         place_s = time.perf_counter() - t0
         self._attach_solver(entries, lp_results)
         timings = {
             "pack_s": pack_s, "lp_s": lp_s, "place_s": place_s,
             "bucket_lp_s": [lp_s], "bucket_place_s": [place_s],
+            "placement": _placement_telemetry(self.placement.engine,
+                                              tels),
             "total_s": time.perf_counter() - t_start,
         }
         return FleetResult(entries=entries, stats=stats, plan=None,

@@ -60,6 +60,7 @@ vectorized host path.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -68,7 +69,14 @@ from .batch import ProblemBatch, pack_problems
 from .placement import FIT_POLICIES
 from .solution import EPS, Solution
 
-__all__ = ["place_many"]
+__all__ = ["place_many", "PLACEMENT_STEPPERS"]
+
+# The lockstep stepper implementations behind ``place_many(placement=)``:
+# 'lockstep' is this module's vectorized-numpy engine (one host dispatch
+# per placement step); 'compiled' is ``place_step``'s on-device stepper
+# (one host dispatch per node-type phase boundary), which falls back to
+# 'lockstep' when a wave's pool tensor would be oversized.
+PLACEMENT_STEPPERS = ("lockstep", "compiled")
 
 
 @dataclasses.dataclass
@@ -120,6 +128,28 @@ def _phases(problem, mapping: np.ndarray, fit: str,
                    dem_norm=dn_all)
 
 
+def _batch_aux(batch: ProblemBatch, phases: list[_Phases]):
+    """Scoring-side arrays shared by the lockstep stepper engines.
+
+    Returns ``(dn, capx, span_all)``: per-task demand norms (B, n) padded
+    with 1.0; per-(instance, type) capacity (B, m, D) with +inf on padded
+    dims so ``rem / capx`` is bit-exact on real dims and 0 on padded
+    ones; and every task's span mask (B, n, T') bool.
+    """
+    Bn = batch.B
+    dn = np.stack([
+        np.pad(ph.dem_norm, (0, batch.n - len(ph.dem_norm)),
+               constant_values=1.0) for ph in phases])
+    dim_mask = np.zeros((Bn, batch.D), bool)
+    for b, t in enumerate(batch.problems):
+        dim_mask[b, : t.D] = True
+    capx = np.where(dim_mask[:, None, :], batch.cap, np.inf)
+    t_ids = np.arange(batch.Tp)
+    span_all = ((batch.start[:, :, None] <= t_ids)
+                & (t_ids <= batch.end[:, :, None]))
+    return dn, capx, span_all
+
+
 class _Engine:
     """Shared lockstep state across the waves of one place_many call."""
 
@@ -136,19 +166,7 @@ class _Engine:
         self.counts = np.zeros(Bn, np.int64)
         self.placed = np.zeros((Bn, batch.n), bool)
         self.assign = np.full((Bn, batch.n), -1, np.int64)
-        self.dn = np.stack([
-            np.pad(ph.dem_norm, (0, batch.n - len(ph.dem_norm)),
-                   constant_values=1.0) for ph in phases])
-        # capx: per-(instance, type) capacity with +inf on padded dims,
-        # so rem / capx is bit-exact on real dims and 0 on padded ones
-        dim_mask = np.zeros((Bn, batch.D), bool)
-        for b, t in enumerate(batch.problems):
-            dim_mask[b, : t.D] = True
-        self.capx_all = np.where(dim_mask[:, None, :], batch.cap, np.inf)
-        # every task's span mask, once: (B, n, T') bool
-        t_ids = np.arange(batch.Tp)
-        self.span_all = ((batch.start[:, :, None] <= t_ids)
-                         & (t_ids <= batch.end[:, :, None]))
+        self.dn, self.capx_all, self.span_all = _batch_aux(batch, phases)
 
     def run_wave(self, k: int, fit: str, filling: bool) -> bool:
         """Own-pack + cross-fill sub-phases of every instance's k-th
@@ -392,7 +410,8 @@ class _Engine:
 
 def place_many(problems, mappings, fit: str = "first",
                filling: bool = False, backend: str = "numpy",
-               meta: dict | None = None) -> list[Solution]:
+               meta: dict | None = None, placement: str = "lockstep",
+               telemetry: dict | None = None) -> list[Solution]:
     """Batched ``two_phase`` over B instances; placements are identical.
 
     ``problems`` is a sequence of ``Problem``s or an already-packed
@@ -401,22 +420,68 @@ def place_many(problems, mappings, fit: str = "first",
     task -> node-type mapping in trimmed coordinates.  Returns one
     ``Solution`` per instance, equal (node purchases, ``assign``, cost)
     to ``two_phase(batch.problems[b], mappings[b], fit, filling)``.
+
+    ``placement`` picks the lockstep stepper: ``'lockstep'`` (default)
+    is this module's vectorized-numpy engine, one host dispatch per
+    placement step; ``'compiled'`` runs each node-type phase as one
+    on-device ``lax.scan`` (``repro.core.place_step``) so the host
+    dispatches only at phase boundaries — placements are bit-identical,
+    and oversized pools fall back to the numpy engine automatically.
+    ``backend`` routes the numpy stepper's scoring pass (``'kernel'`` =
+    the batch-dim-aware Pallas fit kernel); the compiled stepper scores
+    on-device and ignores it.  ``telemetry``, when a dict, is filled
+    in place with the stepper actually used, wave count, per-wave
+    seconds, and (compiled) device-dispatch counts.
+
+    >>> import numpy as np
+    >>> from repro.core import place_many, two_phase
+    >>> from repro.workload import SyntheticSpec, synthetic_instance
+    >>> ps = [synthetic_instance(SyntheticSpec(n=12, m=2, D=2, T=6,
+    ...                                        seed=s)) for s in (0, 1)]
+    >>> maps = [np.zeros(12, np.int64), np.ones(12, np.int64)]
+    >>> sols = place_many(ps, maps, fit="similarity")
+    >>> want = two_phase(ps[0], maps[0], fit="similarity")
+    >>> bool(np.array_equal(sols[0].assign, want.assign))
+    True
     """
     if fit not in FIT_POLICIES:
         raise ValueError(f"fit must be one of {FIT_POLICIES}")
     if backend not in ("numpy", "kernel"):
         raise ValueError(
             f"backend must be 'numpy'|'kernel', got {backend!r}")
+    if placement not in PLACEMENT_STEPPERS:
+        raise ValueError(
+            f"placement must be one of {PLACEMENT_STEPPERS}, "
+            f"got {placement!r}")
     batch = problems if isinstance(problems, ProblemBatch) \
         else pack_problems(problems)
     if len(mappings) != batch.B:
         raise ValueError("need exactly one mapping per instance")
     phases = [_phases(t, np.asarray(mp, np.int64), fit, filling)
               for t, mp in zip(batch.problems, mappings)]
+    if placement == "compiled":
+        from . import place_step
+
+        sols = place_step.run_compiled(batch, phases, fit=fit,
+                                       filling=filling, meta=meta,
+                                       telemetry=telemetry)
+        if sols is not None:
+            return sols
+        # oversized pool: place_step declined (and recorded why in
+        # telemetry); fall through to the numpy lockstep engine
     eng = _Engine(batch, phases, backend)
+    wave_s = []
     k = 0
-    while eng.run_wave(k, fit, filling):
+    while True:
+        t0 = time.perf_counter()
+        if not eng.run_wave(k, fit, filling):
+            break
+        wave_s.append(time.perf_counter() - t0)
         k += 1
+    if telemetry is not None:
+        telemetry.setdefault("engine", "lockstep")
+        telemetry["waves"] = len(wave_s)
+        telemetry["wave_s"] = wave_s
 
     out = []
     for b, t in enumerate(batch.problems):

@@ -19,7 +19,7 @@ from . import fit as _fit
 from . import ref
 
 __all__ = ["on_tpu", "congestion", "congestion_many", "fit_scores",
-           "fit_scores_many"]
+           "fit_scores_many", "fit_scores_step"]
 
 _EPS = 1e-7
 
@@ -134,3 +134,59 @@ def fit_scores_many(rem, dem, s, e, inv_cap, scored: bool = False,
     cos = np.asarray(dot) / (
         dem_norm[:, None] * np.sqrt(np.asarray(norm2)) + 1e-30)
     return feas, cos
+
+
+def fit_scores_step(rem, dem, span, capx, dem_norm, scored: bool = False,
+                    quantum=None, eps: float = _EPS):
+    """In-loop callable form of ``fit_scores_many`` for compiled steppers.
+
+    Unlike the host-facing wrappers above, this is a pure-jnp function
+    meant to be *traced* — it takes and returns ``jnp`` arrays, does no
+    host conversion or padding, and is safe inside ``lax.while_loop`` /
+    ``lax.scan`` bodies (the compiled lockstep placement stepper,
+    ``repro.core.place_step``, calls it once per placement step).
+
+    All slot-carrying operands arrive flattened to one contiguous
+    reduction axis K = T*D (slot k = t*D + d), the same layout trick
+    the numpy engine uses for its feasibility scan: the similarity dot
+    then lowers to a batched mat-vec over a contiguous axis instead of
+    a 4-D einsum with a tiny trailing dimension, which CPU/TPU backends
+    vectorize an order of magnitude better.
+
+    rem:      (B, N, K) open-node remaining capacity.
+    dem:      (B, K) the pending task's demand, tiled over timeslots.
+    span:     (B, K) bool, True inside each instance's task span.
+    capx:     (B, K) node-type capacity tiled over slots, +inf on
+              padded dims, so ``rem / capx`` is exact on real dims and
+              0 on padded ones.
+    dem_norm: (B,) the precomputed per-task demand norm of the
+              similarity denominator.
+    quantum:  similarity tie-break quantization as a *runtime* scalar
+              (1e9 for the engines' shared 9-decimal rounding).  Passing
+              it as an operand keeps XLA from folding the division into
+              a multiply-by-reciprocal, which is not bit-equal to the
+              host engines' ``np.round(score, 9)``.
+
+    Returns ``(feas, score)``, both (B, N): feasibility is the same
+    elementwise float comparison the host engines evaluate
+    (``not any(rem < dem - eps)`` over the span), and ``score`` is the
+    quantized cosine similarity (zeros when ``scored`` is False).  In a
+    float64 trace (``jax.experimental.enable_x64``) every elementwise
+    term is bit-identical to the numpy engines; the reduction sums may
+    differ in the last ulp, which the shared quantization collapses.
+    """
+    thr = dem - eps
+    viol = ((rem < thr[:, None, :]) & span[:, None, :]).any(axis=2)
+    feas = ~viol
+    if not scored:
+        return feas, jnp.zeros(feas.shape, rem.dtype)
+    span_f = span.astype(rem.dtype)
+    rem_n = rem / capx[:, None, :]
+    q = (dem / capx) * span_f                 # exact: dem_n * {0, 1}
+    dot = jnp.einsum("bnk,bk->bn", rem_n, q)  # batched mat-vec
+    rm = rem_n * span_f[:, None, :]
+    norm2 = (rm * rm).sum(axis=2)
+    score = dot / (dem_norm[:, None] * jnp.sqrt(norm2) + 1e-30)
+    if quantum is not None:
+        score = jnp.rint(score * quantum) / quantum
+    return feas, score

@@ -31,11 +31,17 @@ from repro.core import (
 from repro.workload.jobs import DEFAULT_SCHEDULE, fleet_problem
 
 
-def run_fleet(problem, n_scenarios: int) -> None:
+def run_fleet(problem, n_scenarios: int,
+              placement: str = "batched") -> None:
     """Evaluate demand-scaled scenario variants in one FleetEngine
     session: every scenario's mapping LP solves in one fused batch and
-    every greedy placement advances in lockstep."""
-    from repro.core import FleetEngine, SolverConfig, SweepConfig
+    every greedy placement advances in lockstep (``placement=
+    'compiled'`` routes it through the on-device stepper).  Doubles as
+    the docs' read-the-telemetry walkthrough (docs/benchmarks.md): the
+    per-phase timings and the placement-stepper telemetry printed here
+    come straight from ``FleetResult.timings``."""
+    from repro.core import (FleetEngine, PlacementConfig, SolverConfig,
+                            SweepConfig)
 
     cap_max = problem.node_types.cap.max(axis=0)
     factors = np.linspace(0.5, 1.5, n_scenarios)
@@ -46,6 +52,7 @@ def run_fleet(problem, n_scenarios: int) -> None:
         for f in factors]
     engine = FleetEngine(
         solver=SolverConfig(iters=1500),
+        placement=PlacementConfig(engine=placement),
         sweep=SweepConfig(max_buckets=4),
         algos=("penalty-map-f", "lp-map-f"),
     )
@@ -53,8 +60,20 @@ def run_fleet(problem, n_scenarios: int) -> None:
     t = result.timings
     print(f"== fleet scenarios ({n_scenarios} demand scalings, one "
           f"FleetEngine session) ==")
-    print(f"   lp {t['lp_s']:.1f}s + placement {t['place_s']:.1f}s over "
-          f"{result.plan.n_buckets} shape bucket(s)\n")
+    print(f"   pack {t['pack_s']:.2f}s + lp {t['lp_s']:.1f}s + "
+          f"placement {t['place_s']:.1f}s over "
+          f"{result.plan.n_buckets} shape bucket(s)")
+    tel = t["placement"]
+    line = (f"   placement engine: {tel['engine']} "
+            f"({tel['calls']} stepper calls")
+    if "wave_s_total" in tel:
+        line += (f", {tel['waves']} phase waves, "
+                 f"{tel['wave_s_total']:.2f}s in waves")
+    if tel.get("engine") == "compiled":
+        line += (f", {tel['dispatches']} device dispatches, "
+                 f"{tel['fallbacks']} fallbacks, "
+                 f"modes {'/'.join(tel['modes'])}")
+    print(line + ")\n")
     print(f"{'demand x':>9s} {'penalty-map-f $/day':>20s} "
           f"{'lp-map-f $/day':>15s} {'x LB':>6s}")
     for f, e in zip(factors, result.entries):
@@ -71,6 +90,12 @@ def run(argv=None):
     ap.add_argument("--fleet", type=int, default=0, metavar="N",
                     help="evaluate N demand-scaled scenarios through one "
                          "FleetEngine session instead of a single plan")
+    ap.add_argument("--placement",
+                    choices=["batched", "compiled", "loop"],
+                    default="batched",
+                    help="placement engine of the --fleet session "
+                         "(identical placements; 'compiled' shows the "
+                         "on-device stepper telemetry)")
     args = ap.parse_args(argv)
 
     problem, tasks = fleet_problem(DEFAULT_SCHEDULE, args.dryrun_dir)
@@ -79,7 +104,7 @@ def run(argv=None):
           f"from dry-run artifacts), {problem.m} slice SKUs, T=24h\n")
 
     if args.fleet:
-        run_fleet(problem, args.fleet)
+        run_fleet(problem, args.fleet, placement=args.placement)
         return None
 
     trimmed, _ = trim_timeline(problem)

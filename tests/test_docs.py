@@ -1,0 +1,73 @@
+"""Docs-suite health: intra-repo links resolve and the API names the
+docs lean on stay exported.
+
+The heavyweight half of the docs gate (doctest execution + README
+snippet runs) lives in ``benchmarks/check_docs.py`` and runs as its
+own CI step; this tier-1 suite covers the fast invariants so a broken
+link or a renamed public symbol fails locally too.
+"""
+
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from benchmarks import check_docs  # noqa: E402
+
+import repro.core  # noqa: E402
+
+
+# Every public name the docs/ suite and README reference by symbol; the
+# docstring audit keeps these in repro.core.__all__ (docs must not name
+# things users cannot import).
+DOC_NAMES = {
+    "FleetEngine", "SolverConfig", "PlacementConfig", "SweepConfig",
+    "FleetResult", "PackPlan", "plan_buckets",
+    "evaluate_many", "evaluate", "rightsize",
+    "place_many", "two_phase", "TypePool",
+    "pack_problems", "ProblemBatch", "solve_lp_many", "solve_lp_sweep",
+    "solve_lp_pdhg", "solve_lp", "SolveStats", "PDHGResult",
+    "Problem", "NodeTypes", "Solution", "verify", "trim_timeline",
+    "penalty_map", "lp_map", "FIT_POLICIES",
+}
+
+
+class TestDocsSuite:
+    def test_docs_files_exist(self):
+        for name in ("architecture.md", "solver.md", "bucketing.md",
+                     "benchmarks.md"):
+            assert (REPO / "docs" / name).is_file(), f"docs/{name} missing"
+
+    def test_intra_repo_links_resolve(self):
+        assert check_docs.check_links() == 0
+
+    def test_doc_names_are_exported(self):
+        missing = DOC_NAMES - set(repro.core.__all__)
+        assert not missing, (
+            f"docs reference unexported repro.core names: {sorted(missing)}")
+
+    def test_audited_modules_importable(self):
+        import importlib
+
+        for name in check_docs.AUDITED_MODULES:
+            importlib.import_module(name)
+
+    def test_slugs_match_github_rules(self):
+        slug = check_docs._slug
+        assert slug("### 3. Greedy placement — three engines, "
+                    "identical placements".lstrip("# ")) == \
+            "3-greedy-placement--three-engines-identical-placements"
+        assert slug("Migrating from the legacy `evaluate_many` "
+                    "kwargs") == \
+            "migrating-from-the-legacy-evaluate_many-kwargs"
+
+    def test_link_checker_catches_breakage(self, tmp_path,
+                                           monkeypatch):
+        bad = tmp_path / "docs"
+        bad.mkdir()
+        (bad / "a.md").write_text("see [b](missing.md) and "
+                                  "[c](a.md#no-such-heading)\n# Title\n")
+        monkeypatch.setattr(check_docs, "REPO", tmp_path)
+        monkeypatch.setattr(check_docs, "LINK_FILES", ("docs",))
+        assert check_docs.check_links() == 2

@@ -353,6 +353,57 @@ class TestPlaceAndBackends:
                        backend="bogus")
 
 
+class TestCompiledPlacementEngine:
+    """PlacementConfig(engine='compiled') routes the protocol through
+    the on-device stepper: identical costs, telemetry in timings."""
+
+    def test_unknown_engine_names_valid_set(self):
+        with pytest.raises(ValueError,
+                           match=r"batched.*compiled.*loop"):
+            PlacementConfig(engine="warp")
+
+    def test_unknown_stepper_names_valid_set(self):
+        problems = [trim_timeline(p)[0]
+                    for p in _ragged_grid(shapes=1, seeds=1)]
+        maps = [np.zeros(t.n, np.int64) for t in problems]
+        with pytest.raises(ValueError, match=r"lockstep.*compiled"):
+            place_many(problems, maps, placement="warp")
+
+    def test_engine_place_compiled_matches_loop(self):
+        problems = _ragged_grid(shapes=3, seeds=1)
+        lp, _ = FleetEngine(solver=SolverConfig(iters=150)).solve(problems)
+        maps = [r.mapping for r in lp]
+        comp = FleetEngine(
+            placement=PlacementConfig(engine="compiled")).place(
+                problems, maps, fit="similarity", filling=True)
+        looped = FleetEngine(
+            placement=PlacementConfig(engine="loop")).place(
+                problems, maps, fit="similarity", filling=True)
+        for a, b in zip(comp, looped):
+            np.testing.assert_array_equal(a.assign, b.assign)
+            np.testing.assert_array_equal(a.node_type, b.node_type)
+
+    def test_compiled_protocol_costs_and_telemetry(self):
+        problems = _ragged_grid(shapes=2, seeds=2)
+        algos = ("lp-map", "lp-map-f")
+        base = FleetEngine(solver=SolverConfig(iters=150),
+                           algos=algos).evaluate(problems)
+        comp = FleetEngine(solver=SolverConfig(iters=150), algos=algos,
+                           placement=PlacementConfig(engine="compiled")
+                           ).evaluate(problems)
+        for a, b in zip(base.entries, comp.entries):
+            assert a["costs"] == b["costs"]
+        tel_b = base.timings["placement"]
+        assert tel_b["engine"] == "batched" and tel_b["calls"] >= 1
+        tel_c = comp.timings["placement"]
+        assert tel_c["engine"] == "compiled"
+        assert tel_c["dispatches"] >= 1
+        assert tel_c["fallbacks"] == 0
+        assert set(tel_c["modes"]) <= {"type-parallel",
+                                       "wave-sequential"}
+        json.dumps(comp.timings)  # telemetry must stay JSON-clean
+
+
 class TestFleetResult:
     def test_structured_output(self):
         problems = _ragged_grid(shapes=3, seeds=1)
