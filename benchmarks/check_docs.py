@@ -41,6 +41,10 @@ AUDITED_MODULES = (
     "repro.core.place_step",
     "repro.core.batch",
     "repro.kernels.ops",
+    "repro.serve.config",
+    "repro.serve.queue",
+    "repro.serve.scale",
+    "repro.serve.service",
 )
 
 SNIPPET_FILES = ("README.md",)

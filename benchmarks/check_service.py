@@ -1,0 +1,142 @@
+"""Service-regression gate for the online rightsizing loop.
+
+    python -m benchmarks.check_service results/ci/solver_stats.json \
+        results/golden/solver_stats.json [--max-cost-drift 2.0]
+
+Reads the ``serve`` telemetry blob that ``benchmarks.run
+--serve-trace`` (via ``benchmarks.serve_smoke``) merges into
+``solver_stats.json`` and holds the serving loop's contracts:
+
+  * micro-batching invariant: every tick coalesced its touched fleets
+    into exactly ONE FleetEngine dispatch, warm and cold runs alike;
+  * every lane of every tick converged to tolerance;
+  * warm advantage: the median iterations of warm re-solves must stay
+    below the cold control's matched re-solves (the whole point of
+    carrying ``PDHGState`` across ticks);
+  * warm-vs-cold parity: the proposed placement-cost totals of the
+    paired replays agree within ``ServiceConfig.cost_drift_bound_pct``
+    (recorded in the blob; override with ``--max-cost-drift``) — both
+    runs propose from identical per-tick problems, so drift beyond
+    epsilon-optimal vertex noise means a warm-start correctness bug;
+  * determinism vs the committed baseline: same trace spec => same
+    request/tick counts and the adopted ``total_cost`` within the same
+    parity budget;
+  * throughput floor and p99 re-plan latency ceiling vs the baseline
+    (generous factors — CI machines vary, real regressions are 10x).
+
+Exit code 0 on pass, 1 on regression — wired as a CI step right after
+the convergence gate.  Regenerate the baseline intentionally by
+re-running the smoke with ``--serve-trace`` and copying the fresh
+``solver_stats.json`` over ``results/golden/``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(cur: dict, base: dict, max_cost_drift: float | None = None,
+          min_rps_factor: float = 0.2,
+          max_p99_factor: float = 5.0) -> list[str]:
+    """Returns the list of regression messages (empty == gate passes)."""
+    errs = []
+    bound = (max_cost_drift if max_cost_drift is not None
+             else cur["cost_drift_bound_pct"])
+    for key in ("dispatches_per_tick", "cold_dispatches_per_tick"):
+        if cur[key] != 1:
+            errs.append(
+                f"micro-batching invariant broken: {key} == "
+                f"{cur[key]} (every tick must coalesce its touched "
+                f"fleets into ONE FleetEngine dispatch)")
+    for key in ("converged_frac", "cold_converged_frac"):
+        if cur[key] < 1.0:
+            errs.append(
+                f"unconverged lanes: {key} == {cur[key]:.4f} < 1.0")
+    if cur["median_iters_warm"] >= cur["median_iters_cold_control"]:
+        errs.append(
+            f"warm re-solves lost their iteration advantage: median "
+            f"{cur['median_iters_warm']} >= cold control "
+            f"{cur['median_iters_cold_control']}")
+    if cur["proposed_cost_drift_pct"] > bound:
+        errs.append(
+            f"warm-vs-cold proposed-cost parity broken: drift "
+            f"{cur['proposed_cost_drift_pct']:.3f}% > "
+            f"bound {bound}%")
+    for key in ("requests", "ticks", "fleets"):
+        if cur[key] != base[key]:
+            errs.append(
+                f"replay shape changed vs baseline: {key} "
+                f"{cur[key]} != {base[key]} (same TraceSpec must "
+                f"yield the same deterministic replay)")
+    drift = (abs(cur["total_cost"] - base["total_cost"])
+             / base["total_cost"] * 100.0)
+    if drift > bound:
+        errs.append(
+            f"adopted total_cost drifted {drift:.3f}% vs baseline "
+            f"{base['total_cost']} (budget {bound}%)")
+    rps_floor = base["requests_per_s"] * min_rps_factor
+    if cur["requests_per_s"] < rps_floor:
+        errs.append(
+            f"sustained throughput collapsed: {cur['requests_per_s']} "
+            f"req/s < {rps_floor:.2f} ({min_rps_factor}x baseline "
+            f"{base['requests_per_s']})")
+    p99_ceiling = base["p99_replan_s"] * max_p99_factor
+    if cur["p99_replan_s"] > p99_ceiling:
+        errs.append(
+            f"p99 re-plan latency blew up: {cur['p99_replan_s']}s > "
+            f"{p99_ceiling:.2f}s ({max_p99_factor}x baseline "
+            f"{base['p99_replan_s']}s)")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="solver_stats.json from this run")
+    ap.add_argument("baseline", help="committed baseline solver_stats.json")
+    ap.add_argument("--max-cost-drift", type=float, default=None,
+                    help="allowed warm-vs-cold / vs-baseline cost "
+                         "drift in percent (default: the blob's "
+                         "recorded ServiceConfig.cost_drift_bound_pct)")
+    ap.add_argument("--min-rps-factor", type=float, default=0.2,
+                    help="throughput floor as a fraction of the "
+                         "baseline requests/sec (default 0.2)")
+    ap.add_argument("--max-p99-factor", type=float, default=5.0,
+                    help="p99 re-plan latency ceiling as a factor of "
+                         "the baseline (default 5.0)")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        cur = json.load(f).get("serve")
+    with open(args.baseline) as f:
+        base = json.load(f).get("serve")
+    if cur is None:
+        print("FAIL: no 'serve' key in current solver_stats.json — "
+              "run benchmarks.run with --serve-trace", file=sys.stderr)
+        return 1
+    if base is None:
+        print("FAIL: no 'serve' key in baseline solver_stats.json — "
+              "regenerate results/golden/solver_stats.json",
+              file=sys.stderr)
+        return 1
+
+    errs = check(cur, base, args.max_cost_drift, args.min_rps_factor,
+                 args.max_p99_factor)
+    print(f"service gate: {cur['requests']} requests / {cur['ticks']} "
+          f"ticks, {cur['requests_per_s']} req/s, p99 "
+          f"{cur['p99_replan_s']}s, dispatches/tick "
+          f"{cur['dispatches_per_tick']}, warm median "
+          f"{cur['median_iters_warm']} vs cold control "
+          f"{cur['median_iters_cold_control']}, proposed-cost drift "
+          f"{cur['proposed_cost_drift_pct']}%")
+    if errs:
+        for e in errs:
+            print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    print("service gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -66,6 +66,12 @@ def main(argv=None) -> None:
                          "planner in the fleet_sweep bucketing section "
                          "(default: per-scale); 1 forces legacy "
                          "single-bucket packing")
+    ap.add_argument("--serve-trace", action="store_true",
+                    help="also replay the serving-loop smoke trace "
+                         "(benchmarks.serve_smoke: paired warm/cold "
+                         "RightsizingService replays) and merge its "
+                         "requests/sec + p99 telemetry under the "
+                         "'serve' key of <out>/solver_stats.json")
     ap.add_argument("--only", default="")
     ap.add_argument("--out", default="results/paper")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
@@ -107,6 +113,28 @@ def main(argv=None) -> None:
             cells = ",".join(f"{k}={v}" for k, v in row.items())
             print(f"{name},{cells}")
         print(f"{name},_wall_s={dt:.1f}", flush=True)
+
+    if args.serve_trace:
+        from benchmarks.serve_smoke import serve_smoke
+
+        t0 = time.perf_counter()
+        blob = serve_smoke(scale=args.scale)
+        path = os.path.join(args.out, "solver_stats.json")
+        stats = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                stats = json.load(f)
+        stats["serve"] = blob
+        with open(path, "w") as f:
+            json.dump(stats, f, indent=1)
+        print(f"# serve telemetry -> {path} ('serve' key)")
+        print(f"serve_trace,requests={blob['requests']},"
+              f"ticks={blob['ticks']},"
+              f"requests_per_s={blob['requests_per_s']},"
+              f"p99_replan_s={blob['p99_replan_s']},"
+              f"dispatches_per_tick={blob['dispatches_per_tick']}")
+        print(f"serve_trace,_wall_s={time.perf_counter() - t0:.1f}",
+              flush=True)
 
     # roofline table from dry-run artifacts when available
     try:

@@ -1,0 +1,122 @@
+"""Serving-loop smoke benchmark: paired warm/cold trace replays.
+
+    python -m benchmarks.serve_smoke [--scale quick|default|paper]
+                                     [--seed 0] [--out results/ci]
+
+Replays ONE deterministic arrival trace (``repro.serve.gct_trace``)
+through two ``RightsizingService`` instances — the production
+warm-started configuration and a ``warm_start=False`` cold control —
+and emits the ``serve`` telemetry blob the service-regression gate
+(``benchmarks.check_service``) diffs against
+``results/golden/solver_stats.json``:
+
+  * sustained ``requests_per_s`` and ``p50/p99_replan_s`` of the warm
+    (production) run;
+  * ``dispatches_per_tick`` (the micro-batching invariant: every tick
+    funnels its touched fleets through ONE FleetEngine dispatch);
+  * ``median_iters_warm`` vs ``median_iters_cold_control`` — warm
+    re-solves of perturbed fleets must stay cheaper than the cold
+    control's matched re-solves;
+  * warm-vs-cold parity of ``proposed_cost_total`` within
+    ``ServiceConfig.cost_drift_bound_pct`` (both runs propose from the
+    same per-tick problems, so the drift is pure epsilon-optimal
+    vertex noise).
+
+``benchmarks.run --serve-trace`` merges this blob under the ``"serve"``
+key of ``<out>/solver_stats.json`` so one artifact feeds both the
+convergence and service gates.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+_SCALES = {
+    # fleets, requests, n0, m, push_per_tick
+    "quick": (4, 220, 36, 5, 12),
+    "default": (4, 220, 36, 5, 12),
+    "paper": (6, 400, 48, 6, 16),
+}
+
+
+def serve_smoke(scale: str = "quick", seed: int = 0) -> dict:
+    """Run the paired warm/cold replay and return the ``serve`` blob."""
+    from repro.serve import (RightsizingService, ServiceConfig, TraceSpec,
+                             gct_trace, replay)
+
+    fleets, requests, n0, m, push = _SCALES[scale]
+    spec = TraceSpec(fleets=fleets, requests=requests, n0=n0, m=m,
+                     seed=seed)
+    trace = gct_trace(spec)
+    reports = {}
+    walls = {}
+    for label, warm in [("warm", True), ("cold", False)]:
+        svc = RightsizingService(
+            config=ServiceConfig(warm_start=warm))
+        t0 = time.perf_counter()
+        reports[label] = replay(svc, list(trace), push_per_tick=push)
+        walls[label] = round(time.perf_counter() - t0, 2)
+    w, c = reports["warm"], reports["cold"]
+    drift = (abs(w["proposed_cost_total"] - c["proposed_cost_total"])
+             / c["proposed_cost_total"] * 100.0)
+    return {
+        "scale": scale,
+        "seed": seed,
+        "trace": "gct",
+        "fleets": fleets,
+        "requests": w["requests"],
+        "push_per_tick": push,
+        "ticks": w["ticks"],
+        "wall_s": walls["warm"],
+        "requests_per_s": w["requests_per_s"],
+        "p50_replan_s": w["p50_replan_s"],
+        "p99_replan_s": w["p99_replan_s"],
+        "dispatches_per_tick": w["dispatches_per_tick"],
+        "cold_dispatches_per_tick": c["dispatches_per_tick"],
+        "warm_lanes": w["warm_lanes"],
+        "cold_lanes": w["cold_lanes"],
+        "drift_fallbacks": w["drift_fallbacks"],
+        "median_iters_warm": w["median_iters_warm"],
+        "median_iters_admit": w["median_iters_admit"],
+        "median_iters_cold_control": c["median_iters_cold"],
+        "converged_frac": w["converged_frac"],
+        "cold_converged_frac": c["converged_frac"],
+        "events": w["events"],
+        "total_cost": w["total_cost"],
+        "cold_total_cost": c["total_cost"],
+        "proposed_cost_total": w["proposed_cost_total"],
+        "cold_proposed_cost_total": c["proposed_cost_total"],
+        "proposed_cost_drift_pct": round(drift, 4),
+        "cost_drift_bound_pct":
+            ServiceConfig().cost_drift_bound_pct,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=sorted(_SCALES), default="quick")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="merge the blob under the 'serve' key of "
+                         "<out>/solver_stats.json (default: print only)")
+    args = ap.parse_args(argv)
+    blob = serve_smoke(scale=args.scale, seed=args.seed)
+    print(json.dumps(blob, indent=2))
+    if args.out:
+        path = os.path.join(args.out, "solver_stats.json")
+        stats = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                stats = json.load(f)
+        stats["serve"] = blob
+        os.makedirs(args.out, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(stats, f, indent=1)
+        print(f"# serve telemetry merged -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,9 +15,9 @@ evaluated through ONE ``FleetEngine`` session (one fused batched LP
 solve + lockstep placements, the typed-config API from
 ``repro.core.engine``):
 
-    PYTHONPATH=src python examples/rightsize_fleet.py --fleet 8
+    PYTHONPATH=src python examples/rightsize_fleet.py fleet -n 8
 
-The --fleet banner prints the session's per-phase timings and the
+The fleet banner prints the session's per-phase timings and the
 placement-stepper telemetry from ``FleetResult.timings`` (which
 engine placed, how many phase waves / device dispatches, fallbacks) —
 the "read the telemetry" walkthrough referenced by
@@ -25,8 +25,12 @@ docs/benchmarks.md.  Pass ``--placement compiled`` to route the
 greedy phase through the compiled on-device stepper (placements are
 identical either way):
 
-    PYTHONPATH=src python examples/rightsize_fleet.py --fleet 8 \
+    PYTHONPATH=src python examples/rightsize_fleet.py fleet -n 8 \
         --placement compiled
+
+Every subcommand of the ``repro.launch.rightsize`` CLI works here too
+(``plan``, ``compare``, ``fleet``, ``serve``); bare invocation runs
+``compare`` followed by a ``plan``.
 """
 
 import sys
@@ -35,6 +39,7 @@ from repro.launch.rightsize import run
 
 if __name__ == "__main__":
     argv = sys.argv[1:]
-    if "--fleet" not in argv:
-        argv = ["--compare"] + argv
+    if not argv or argv[0].startswith("-"):
+        run(["compare"] + argv)
+        argv = ["plan"] + argv
     run(argv)

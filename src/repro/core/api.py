@@ -27,6 +27,7 @@ exactly (paper §II).
 from __future__ import annotations
 
 import time
+import warnings
 
 from .problem import Problem, trim_timeline
 from .penalty import penalty_map
@@ -145,15 +146,45 @@ def evaluate(problem: Problem, algos=ALGORITHMS, backend: str = "numpy",
     return _protocol_entry(trimmed, lp_result, lb, algos, backend)
 
 
-def evaluate_many(problems, algos=ALGORITHMS, backend: str = "numpy",
-                  lp_iters: int = 2000, operator: str = "auto",
-                  placement: str = "batched",
-                  lp_tol: float | None = None,
-                  lp_adaptive: bool = True, lp_restart: bool = True,
-                  warm_start: int | None = None,
-                  return_stats: bool = False):
+_UNSET = object()  # sentinel: distinguishes "kwarg passed" from default
+
+# legacy kwarg -> the typed-config equivalent named in the deprecation
+# warning (behavior is bit-stable either way; only the spelling moves)
+_LEGACY_KWARGS = {
+    "backend": "PlacementConfig(backend=...)",
+    "lp_iters": "SolverConfig(iters=...)",
+    "operator": "SolverConfig(operator=...)",
+    "placement": "PlacementConfig(engine=...)",
+    "lp_tol": "SolverConfig(tol=...)",
+    "lp_adaptive": "SolverConfig(adaptive=...)",
+    "lp_restart": "SolverConfig(restart=...)",
+    "warm_start": "SweepConfig(warm_start=...)",
+    "return_stats": "FleetEngine.evaluate(...).stats on the FleetResult",
+}
+
+_LEGACY_DEFAULTS = {
+    "backend": "numpy", "lp_iters": 2000, "operator": "auto",
+    "placement": "batched", "lp_tol": None, "lp_adaptive": True,
+    "lp_restart": True, "warm_start": None, "return_stats": False,
+}
+
+
+def evaluate_many(problems, algos=ALGORITHMS, backend=_UNSET,
+                  lp_iters=_UNSET, operator=_UNSET,
+                  placement=_UNSET,
+                  lp_tol=_UNSET,
+                  lp_adaptive=_UNSET, lp_restart=_UNSET,
+                  warm_start=_UNSET,
+                  return_stats=_UNSET):
     """§VI protocol over a grid of instances, fully batched — the
     **legacy kwarg shim** over ``core.engine.FleetEngine``.
+
+    .. deprecated::
+        The kwarg surface is deprecated: passing any of the legacy
+        keywords emits a ``DeprecationWarning`` naming its typed-config
+        equivalent (``SolverConfig`` / ``PlacementConfig`` /
+        ``SweepConfig``).  Behavior is bit-stable — only the spelling
+        moves to ``FleetEngine``.
 
     Equivalent to ``[evaluate(p, algos, lp_solver='pdhg') for p in
     problems]`` — the batched engines pad ragged instances exactly, so
@@ -212,6 +243,26 @@ def evaluate_many(problems, algos=ALGORITHMS, backend: str = "numpy",
     """
     from .engine import (FleetEngine, PlacementConfig, SolverConfig,
                          SweepConfig)
+
+    passed = {name: val for name, val in [
+        ("backend", backend), ("lp_iters", lp_iters),
+        ("operator", operator), ("placement", placement),
+        ("lp_tol", lp_tol), ("lp_adaptive", lp_adaptive),
+        ("lp_restart", lp_restart), ("warm_start", warm_start),
+        ("return_stats", return_stats)] if val is not _UNSET}
+    if passed:
+        hints = "; ".join(f"{k} -> {_LEGACY_KWARGS[k]}" for k in passed)
+        warnings.warn(
+            f"the evaluate_many kwarg surface is deprecated; build a "
+            f"FleetEngine with the typed configs instead ({hints})",
+            DeprecationWarning, stacklevel=2)
+    resolved = dict(_LEGACY_DEFAULTS, **passed)
+    backend, lp_iters, operator, placement, lp_tol, lp_adaptive, \
+        lp_restart, warm_start, return_stats = (
+            resolved[k] for k in ("backend", "lp_iters", "operator",
+                                  "placement", "lp_tol", "lp_adaptive",
+                                  "lp_restart", "warm_start",
+                                  "return_stats"))
 
     sweep = SweepConfig(warm_start=warm_start)  # rejects warm_start <= 0
     if warm_start is not None and lp_tol is None:

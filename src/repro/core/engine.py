@@ -49,7 +49,7 @@ import numpy as np
 from .api import ALGORITHMS
 from .batch import (DEFAULT_CHECK_EVERY, ProblemBatch, pack_problems,
                     solve_lp_many, solve_lp_sweep)
-from .lp_pdhg import PDHGResult, SolveStats
+from .lp_pdhg import PDHGResult, PDHGState, SolveStats
 from .penalty import penalty_map
 from .place_batch import place_many
 from .placement import FIT_POLICIES, two_phase
@@ -207,7 +207,7 @@ class SweepConfig:
     >>> SweepConfig(warm_start=2, max_buckets=3)
     Traceback (most recent call last):
         ...
-    ValueError: warm_start and max_buckets > 1 are mutually exclusive: ...
+    ValueError: SweepConfig.warm_start and SweepConfig.max_buckets > 1 are mutually exclusive: ...
     """
 
     warm_start: int | None = None
@@ -233,16 +233,23 @@ class SweepConfig:
                 f"bucket_overhead must be >= 0, got {self.bucket_overhead!r}")
         if self.warm_start is not None and self.max_buckets > 1:
             raise ValueError(
-                "warm_start and max_buckets > 1 are mutually exclusive: "
-                "warm-started sweep chaining packs every group to one "
-                "common shape (states must align lane-for-lane), while "
-                "bucketing splits shapes apart")
+                "SweepConfig.warm_start and SweepConfig.max_buckets > 1 "
+                "are mutually exclusive: warm-started sweep chaining "
+                "packs every group to one common shape (states must "
+                "align lane-for-lane), while bucketing splits shapes "
+                "apart.  To combine warm starts with shape-bucketed "
+                "micro-batches online, use the serving loop "
+                "(repro.serve.RightsizingService), which re-buckets per "
+                "tick and carries per-fleet state across re-solves")
         if self.warm_start is not None and self.shard_size is not None:
             raise ValueError(
-                "warm_start and shard_size are mutually exclusive: the "
-                "warm chain already dispatches one group at a time "
-                "(warm_start IS its shard size), so a separate shard "
-                "size would be silently ignored")
+                "SweepConfig.warm_start and SweepConfig.shard_size are "
+                "mutually exclusive: the warm chain already dispatches "
+                "one group at a time (warm_start IS its shard size), so "
+                "a separate shard size would be silently ignored.  For "
+                "warm-started dispatches of bounded size, use the "
+                "serving loop (repro.serve.RightsizingService), whose "
+                "admission queue caps each tick's micro-batch")
 
 
 # --- shape-bucketed packing planner ----------------------------------------
@@ -607,6 +614,52 @@ class FleetEngine:
                 "every fit policy (the legacy protocol); narrowing "
                 "PlacementConfig.fit requires engine='batched'")
 
+    def with_overrides(self, **changes) -> "FleetEngine":
+        """Derive a new engine with field-level changes routed across
+        the config family (``dataclasses.replace`` under the hood).
+
+        Accepts any field of ``SolverConfig`` / ``PlacementConfig`` /
+        ``SweepConfig`` by name (the three families share no field
+        names), whole replacement configs via ``solver=`` /
+        ``placement=`` / ``sweep=``, and ``algos=``.  The derived
+        engine re-validates, so invalid combinations fail exactly as
+        they would at construction.  The base engine is untouched.
+
+        >>> eng = FleetEngine(solver=SolverConfig(tol=5e-3))
+        >>> eng2 = eng.with_overrides(tol=1e-2, fit="first")
+        >>> (eng2.solver.tol, eng2.placement.fit, eng.solver.tol)
+        (0.01, 'first', 0.005)
+        >>> eng.with_overrides(fuel="ion")
+        Traceback (most recent call last):
+            ...
+        ValueError: with_overrides got unknown field 'fuel'; ...
+        """
+        changes = dict(changes)
+        parts = {
+            "solver": changes.pop("solver", self.solver),
+            "placement": changes.pop("placement", self.placement),
+            "sweep": changes.pop("sweep", self.sweep),
+        }
+        algos = changes.pop("algos", self.algos)
+        owner = {f.name: g for g, cfg in parts.items()
+                 for f in dataclasses.fields(cfg)}
+        grouped: dict[str, dict] = {g: {} for g in parts}
+        for name, value in changes.items():
+            if name not in owner:
+                known = ", ".join(sorted(owner))
+                raise ValueError(
+                    f"with_overrides got unknown field {name!r}; "
+                    f"expected solver=/placement=/sweep=/algos= or one "
+                    f"of the config fields: {known}")
+            grouped[owner[name]][name] = value
+        return FleetEngine(
+            solver=dataclasses.replace(parts["solver"],
+                                       **grouped["solver"]),
+            placement=dataclasses.replace(parts["placement"],
+                                          **grouped["placement"]),
+            sweep=dataclasses.replace(parts["sweep"], **grouped["sweep"]),
+            algos=algos)
+
     # -- phase 0: pack -------------------------------------------------
 
     def pack(self, problems) -> PackPlan:
@@ -646,7 +699,7 @@ class FleetEngine:
         if cfg.tol is None:
             res = solve_lp_many(batch, iters=cfg.iters,
                                 step_scale=cfg.step_scale,
-                                operator=cfg.operator)
+                                operator=cfg.operator, init=init)
             return res, []
         res, st = solve_lp_many(
             batch, iters=cfg.iters, step_scale=cfg.step_scale,
@@ -655,38 +708,64 @@ class FleetEngine:
             full_output=True)
         return res, [st]
 
-    def _solve_bucket(self, bucket: Bucket):
+    @staticmethod
+    def _slice_state(state: PDHGState | None, lo: int, hi: int):
+        if state is None:
+            return None
+        return PDHGState(
+            x=state.x[lo:hi], y=state.y[lo:hi],
+            eta=None if state.eta is None else state.eta[lo:hi])
+
+    def _solve_bucket(self, bucket: Bucket, init: PDHGState | None = None):
         """Solve one bucket, sharded to ``sweep.shard_size`` instances
         per dispatch (shards share the bucket's padded shape, so every
-        full shard reuses one compile and results are unchanged)."""
+        full shard reuses one compile and results are unchanged); an
+        ``init`` state is sliced lane-for-lane across the shards."""
         shard = self.sweep.shard_size
         batch = bucket.batch
         if shard is None or batch.B <= shard:
-            return self._solve_batch(batch)
+            return self._solve_batch(batch, init=init)
         shape = batch.shape
         results: list[PDHGResult] = []
         stats: list[SolveStats] = []
         for i in range(0, batch.B, shard):
             sub = pack_problems(batch.problems[i : i + shard],
                                 pad_to=shape, assume_trimmed=True)
-            res, st = self._solve_batch(sub)
+            res, st = self._solve_batch(
+                sub, init=self._slice_state(init, i, i + shard))
             results.extend(res)
             stats.extend(st)
         return results, stats
 
-    def solve(self, problems):
+    def solve(self, problems, init: PDHGState | None = None):
         """Mapping-LP phase only: ``(results, stats)`` with one
         ``PDHGResult`` per instance in submission order.  Accepts a
-        problem sequence, a ``ProblemBatch``, or a ``PackPlan``."""
+        problem sequence, a ``ProblemBatch``, or a ``PackPlan``.
+
+        ``init`` warm-starts lane b of the dispatch from lane b of a
+        previous solve's ``PDHGState`` (the serving loop's per-tick
+        re-solve path).  It requires a single-bucket plan — the state's
+        lanes align with ONE dispatch — and is rejected on the
+        warm-started sweep path, which manages its own state chain."""
         if self.sweep.warm_start is not None:
+            if init is not None:
+                raise ValueError(
+                    "solve(init=...) conflicts with "
+                    "SweepConfig.warm_start: the warm-started sweep "
+                    "chain seeds each group from its predecessor")
             trimmed = self._trimmed(problems)
             return self._solve_warm(trimmed)
         plan = problems if isinstance(problems, PackPlan) \
             else self.pack(problems)
+        if init is not None and plan.n_buckets > 1:
+            raise ValueError(
+                f"solve(init=...) needs a single-bucket plan (state "
+                f"lanes align with one dispatch), got {plan.n_buckets} "
+                f"buckets; pack to one bucket or pass a ProblemBatch")
         results: list[PDHGResult | None] = [None] * plan.n_instances
         stats: list[SolveStats] = []
         for bucket in plan.buckets:
-            res, st = self._solve_bucket(bucket)
+            res, st = self._solve_bucket(bucket, init=init)
             for i, r in zip(bucket.indices, res):
                 results[i] = r
             stats.extend(st)

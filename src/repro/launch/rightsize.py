@@ -1,17 +1,24 @@
 """Fleet rightsizing CLI — the paper's technique as the framework's
-capacity-planning layer.
+capacity-planning layer, as four subcommands over one config surface:
 
-    python -m repro.launch.rightsize [--dryrun-dir results/dryrun] \
-        [--algo lp-map-f] [--compare] [--fleet N]
+    python -m repro.launch.rightsize plan    [--algo lp-map-f]
+    python -m repro.launch.rightsize compare
+    python -m repro.launch.rightsize fleet   [-n 8] [--placement compiled]
+    python -m repro.launch.rightsize serve   [--trace gct] [--requests 200]
 
-Builds the TL-Rightsizing instance from the job schedule (demands measured
-from dry-run artifacts when present), purchases a minimum-cost fleet of
-TPU slices, and prints the plan.  --compare runs all four paper algorithms
-plus the timeline-agnostic lower bound (§VI-F).  --fleet N evaluates N
-demand-scaled what-if scenarios (0.5x .. 1.5x utilization) through ONE
-``FleetEngine`` session — the paper's protocol as a provisioning
-*service* answering a batch of capacity questions in one fused solve —
-and prints the $/day frontier per scenario.
+``plan`` purchases a minimum-cost fleet for the LM-job schedule and
+prints the placement; ``compare`` runs all four paper algorithms plus
+the timeline-agnostic lower bound (§VI-F); ``fleet`` evaluates N
+demand-scaled what-if scenarios through ONE ``FleetEngine`` session;
+``serve`` replays an arrival trace through the long-lived
+``RightsizingService`` (docs/service.md) and prints its sustained
+requests/sec + re-plan latency report.
+
+Every subcommand builds its engine through the shared
+``configs_from_flags()`` helper — the solver/placement/sweep flags are
+spelled once, map one-to-one onto the typed configs, and each
+subcommand only overrides the *defaults* (e.g. ``serve`` defaults to a
+tolerance-stopped solver because warm starts need early exit).
 """
 
 from __future__ import annotations
@@ -19,11 +26,15 @@ from __future__ import annotations
 import argparse
 import collections
 import dataclasses
+import json
 
 import numpy as np
 
 from repro.core import (
-    evaluate,
+    FleetEngine,
+    PlacementConfig,
+    SolverConfig,
+    SweepConfig,
     no_timeline_lowerbound,
     rightsize,
     trim_timeline,
@@ -31,34 +42,127 @@ from repro.core import (
 from repro.workload.jobs import DEFAULT_SCHEDULE, fleet_problem
 
 
-def run_fleet(problem, n_scenarios: int,
-              placement: str = "batched") -> None:
-    """Evaluate demand-scaled scenario variants in one FleetEngine
-    session: every scenario's mapping LP solves in one fused batch and
-    every greedy placement advances in lockstep (``placement=
-    'compiled'`` routes it through the on-device stepper).  Doubles as
-    the docs' read-the-telemetry walkthrough (docs/benchmarks.md): the
-    per-phase timings and the placement-stepper telemetry printed here
-    come straight from ``FleetResult.timings``."""
-    from repro.core import (FleetEngine, PlacementConfig, SolverConfig,
-                            SweepConfig)
+def configs_from_flags(args) -> dict:
+    """Map the shared CLI flags onto the typed-config family — the ONE
+    place flag spellings meet config fields.  Returns kwargs for
+    ``FleetEngine(**configs_from_flags(args))`` (minus ``algos``, which
+    each subcommand picks)."""
+    return {
+        "solver": SolverConfig(tol=args.lp_tol, iters=args.lp_iters,
+                               operator=args.operator),
+        "placement": PlacementConfig(engine=args.placement,
+                                     backend=args.backend),
+        "sweep": SweepConfig(max_buckets=args.buckets,
+                             shard_size=args.shard_size,
+                             warm_start=args.warm_start),
+    }
 
+
+def _shared_flags() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(add_help=False)
+    p.add_argument("--dryrun-dir", default="results/dryrun")
+    p.add_argument("--lp-tol", type=float, default=None,
+                   help="tolerance-stopped LP solve "
+                        "(SolverConfig.tol; default: fixed iterations)")
+    p.add_argument("--lp-iters", type=int, default=2000,
+                   help="LP iteration count / cap (SolverConfig.iters)")
+    p.add_argument("--operator", default="auto",
+                   choices=["auto", "dense", "cumsum", "pallas"],
+                   help="congestion-operator form (SolverConfig.operator)")
+    p.add_argument("--placement", default="batched",
+                   choices=["batched", "compiled", "loop"],
+                   help="placement engine (PlacementConfig.engine)")
+    p.add_argument("--backend", default="numpy",
+                   choices=["numpy", "kernel"],
+                   help="placement scoring backend "
+                        "(PlacementConfig.backend)")
+    p.add_argument("--buckets", type=int, default=1,
+                   help="max shape buckets (SweepConfig.max_buckets)")
+    p.add_argument("--shard-size", type=int, default=None,
+                   help="LP dispatch shard size (SweepConfig.shard_size)")
+    p.add_argument("--warm-start", type=int, default=None,
+                   help="warm-started sweep group size "
+                        "(SweepConfig.warm_start)")
+    return p
+
+
+def _load_problem(args):
+    problem, tasks = fleet_problem(DEFAULT_SCHEDULE, args.dryrun_dir)
+    measured = sum(1 for t in tasks if t["source"] == "dryrun")
+    print(f"jobs -> {problem.n} tasks ({measured} demand vectors measured "
+          f"from dry-run artifacts), {problem.m} slice SKUs, T=24h\n")
+    return problem, tasks
+
+
+def cmd_plan(args):
+    """One fleet plan with one algorithm; the mapping LP runs through
+    the flag-configured engine (``rightsize`` consumes its result)."""
+    problem, tasks = _load_problem(args)
+    trimmed, _ = trim_timeline(problem)
+    lp_result = None
+    if args.algo.startswith("lp-map"):
+        engine = FleetEngine(**configs_from_flags(args),
+                             algos=(args.algo,))
+        (lp_result,), _ = engine.solve([trimmed])
+    sol = rightsize(trimmed, args.algo, lp_result=lp_result)
+    cost = sol.cost(trimmed)
+    print(f"== fleet plan ({args.algo}) — ${cost*24:,.2f}/day ==")
+    per_type = sol.nodes_per_type(trimmed)
+    for b, count in enumerate(per_type):
+        if count:
+            print(f"  {count} x {trimmed.node_types.names[b]} "
+                  f"(${trimmed.node_types.cost[b]*24:,.2f}/day each)")
+    print("\nplacement:")
+    by_node = collections.defaultdict(list)
+    for u, node in enumerate(sol.assign):
+        by_node[int(node)].append(tasks[u])
+    for node in sorted(by_node):
+        b = sol.node_type[node]
+        names = ", ".join(
+            f"{t['name']}[{t['start']:02d}-{t['end']:02d}h]"
+            for t in by_node[node])
+        print(f"  node{node} ({trimmed.node_types.names[b]}): {names}")
+    return sol
+
+
+def cmd_compare(args):
+    """All four paper algorithms on the job fleet, via ONE B=1
+    ``FleetEngine`` session (the LP lower bound is the solver's
+    certified dual bound)."""
+    problem, _ = _load_problem(args)
+    trimmed, _ = trim_timeline(problem)
+    engine = FleetEngine(**configs_from_flags(args))
+    result = engine.evaluate([trimmed])
+    entry = result.entries[0]
+    lb = entry["lb"]
+    print(f"{'algorithm':16s} {'$/day':>10s} {'x LB':>7s}")
+    for algo, cost in entry["costs"].items():
+        print(f"{algo:16s} {cost*24:10.2f} {cost/lb:7.3f}")
+    flat = no_timeline_lowerbound(trimmed)
+    print(f"\nLP lower bound: ${lb*24:.2f}/day")
+    print(f"timeline-agnostic LB (always-on): ${flat*24:.2f}/day "
+          f"({flat/lb:.2f}x — the §VI-F gap)")
+    return entry
+
+
+def cmd_fleet(args):
+    """N demand-scaled what-if scenarios in one FleetEngine session:
+    every scenario's mapping LP solves in one fused batch and every
+    greedy placement advances in lockstep.  Doubles as the docs'
+    read-the-telemetry walkthrough (docs/benchmarks.md)."""
+    problem, _ = _load_problem(args)
     cap_max = problem.node_types.cap.max(axis=0)
-    factors = np.linspace(0.5, 1.5, n_scenarios)
+    factors = np.linspace(0.5, 1.5, args.scenarios)
     # clamp per-task demand to the largest SKU so every scenario stays
     # placeable (a job can never need more than one full slice here)
     scenarios = [dataclasses.replace(
         problem, dem=np.minimum(problem.dem * f, cap_max))
         for f in factors]
-    engine = FleetEngine(
-        solver=SolverConfig(iters=1500),
-        placement=PlacementConfig(engine=placement),
-        sweep=SweepConfig(max_buckets=4),
-        algos=("penalty-map-f", "lp-map-f"),
-    )
+    engine = FleetEngine(**configs_from_flags(args),
+                         algos=("penalty-map-f", "lp-map-f"))
     result = engine.evaluate(scenarios)
     t = result.timings
-    print(f"== fleet scenarios ({n_scenarios} demand scalings, one "
+    print(f"== fleet scenarios ({args.scenarios} demand scalings, one "
           f"FleetEngine session) ==")
     print(f"   pack {t['pack_s']:.2f}s + lp {t['lp_s']:.1f}s + "
           f"placement {t['place_s']:.1f}s over "
@@ -80,64 +184,69 @@ def run_fleet(problem, n_scenarios: int,
         cost = e["costs"]["lp-map-f"]
         print(f"{f:9.2f} {e['costs']['penalty-map-f']*24:20,.2f} "
               f"{cost*24:15,.2f} {e['normalized']['lp-map-f']:6.3f}")
+    return result
+
+
+def cmd_serve(args):
+    """Replay an arrival trace through a ``RightsizingService`` and
+    print the serving report (requests/sec, p50/p99 re-plan latency,
+    warm-vs-cold iteration medians, decision-loop events)."""
+    from repro.serve import (RightsizingService, ServiceConfig,
+                             TraceSpec, gct_trace, jobs_trace, replay)
+
+    engine = FleetEngine(**configs_from_flags(args), algos=("lp-map-f",))
+    service = RightsizingService(
+        engine=engine,
+        config=ServiceConfig(
+            max_requests_per_tick=args.max_requests_per_tick))
+    spec = TraceSpec(fleets=args.fleets, requests=args.requests,
+                     seed=args.seed)
+    if args.trace == "gct":
+        trace = gct_trace(spec)
+    else:
+        trace = jobs_trace(dataclasses.replace(spec, n0=0),
+                           dryrun_dir=args.dryrun_dir)
+    print(f"replaying {len(trace)} requests over {args.fleets} "
+          f"{args.trace} fleets ({args.push_per_tick}/tick pressure)\n")
+    report = replay(service, trace, push_per_tick=args.push_per_tick)
+    print(json.dumps(report, indent=2))
+    return report
 
 
 def run(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--dryrun-dir", default="results/dryrun")
-    ap.add_argument("--algo", default="lp-map-f")
-    ap.add_argument("--compare", action="store_true")
-    ap.add_argument("--fleet", type=int, default=0, metavar="N",
-                    help="evaluate N demand-scaled scenarios through one "
-                         "FleetEngine session instead of a single plan")
-    ap.add_argument("--placement",
-                    choices=["batched", "compiled", "loop"],
-                    default="batched",
-                    help="placement engine of the --fleet session "
-                         "(identical placements; 'compiled' shows the "
-                         "on-device stepper telemetry)")
+    shared = _shared_flags()
+    ap = argparse.ArgumentParser(prog="repro.launch.rightsize")
+    sub = ap.add_subparsers(dest="command")
+
+    p = sub.add_parser("plan", parents=[shared],
+                       help="purchase one fleet plan and print it")
+    p.add_argument("--algo", default="lp-map-f")
+    p.set_defaults(func=cmd_plan)
+
+    p = sub.add_parser("compare", parents=[shared],
+                       help="all four paper algorithms + §VI-F bounds")
+    p.set_defaults(func=cmd_compare)
+
+    p = sub.add_parser("fleet", parents=[shared],
+                       help="N demand-scaled scenarios, one session")
+    p.add_argument("-n", "--scenarios", type=int, default=8)
+    p.set_defaults(func=cmd_fleet, lp_iters=1500, buckets=4)
+
+    p = sub.add_parser("serve", parents=[shared],
+                       help="replay an arrival trace through the "
+                            "RightsizingService")
+    p.add_argument("--trace", choices=["gct", "jobs"], default="gct")
+    p.add_argument("--requests", type=int, default=200)
+    p.add_argument("--fleets", type=int, default=4)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--push-per-tick", type=int, default=8)
+    p.add_argument("--max-requests-per-tick", type=int, default=32)
+    p.set_defaults(func=cmd_serve, lp_tol=5e-3, lp_iters=4000)
+
     args = ap.parse_args(argv)
-
-    problem, tasks = fleet_problem(DEFAULT_SCHEDULE, args.dryrun_dir)
-    measured = sum(1 for t in tasks if t["source"] == "dryrun")
-    print(f"jobs -> {problem.n} tasks ({measured} demand vectors measured "
-          f"from dry-run artifacts), {problem.m} slice SKUs, T=24h\n")
-
-    if args.fleet:
-        run_fleet(problem, args.fleet, placement=args.placement)
-        return None
-
-    trimmed, _ = trim_timeline(problem)
-    if args.compare:
-        res = evaluate(trimmed)
-        lb = res["lb"]
-        print(f"{'algorithm':16s} {'$/day':>10s} {'x LB':>7s}")
-        for algo, cost in res["costs"].items():
-            print(f"{algo:16s} {cost*24:10.2f} {cost/lb:7.3f}")
-        flat = no_timeline_lowerbound(trimmed)
-        print(f"\nLP lower bound: ${lb*24:.2f}/day")
-        print(f"timeline-agnostic LB (always-on): ${flat*24:.2f}/day "
-              f"({flat/lb:.2f}x — the §VI-F gap)")
-
-    sol = rightsize(trimmed, args.algo)
-    cost = sol.cost(trimmed)
-    print(f"\n== fleet plan ({args.algo}) — ${cost*24:,.2f}/day ==")
-    per_type = sol.nodes_per_type(trimmed)
-    for b, count in enumerate(per_type):
-        if count:
-            print(f"  {count} x {trimmed.node_types.names[b]} "
-                  f"(${trimmed.node_types.cost[b]*24:,.2f}/day each)")
-    print("\nplacement:")
-    by_node = collections.defaultdict(list)
-    for u, node in enumerate(sol.assign):
-        by_node[int(node)].append(tasks[u])
-    for node in sorted(by_node):
-        b = sol.node_type[node]
-        names = ", ".join(
-            f"{t['name']}[{t['start']:02d}-{t['end']:02d}h]"
-            for t in by_node[node])
-        print(f"  node{node} ({trimmed.node_types.names[b]}): {names}")
-    return sol
+    if args.command is None:
+        args = ap.parse_args(["plan"] + (argv or []))
+    return args.func(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,22 @@
+"""Online rightsizing service: a serving loop over ``FleetEngine``.
+
+``RightsizingService`` keeps many live fleets rightsized under a
+stream of arrivals/departures/bursts: an admission queue coalesces
+requests into shape-bucketed micro-batches (one LP dispatch per tick),
+perturbed fleets re-enter PDHG warm from their previous state, and a
+flag-gated decision loop adopts or holds the proposed scale changes.
+See docs/service.md for the tick lifecycle and telemetry walkthrough.
+"""
+
+from .config import ServiceConfig
+from .queue import AdmissionQueue, PendingRequest, Request
+from .scale import ScaleCheck, ScaleDecision, ScaleEvent, evaluate_scale
+from .service import FleetView, RightsizingService, TickRecord
+from .trace import TraceSpec, gct_trace, jobs_trace, replay
+
+__all__ = [
+    "ServiceConfig", "AdmissionQueue", "PendingRequest", "Request",
+    "ScaleCheck", "ScaleDecision", "ScaleEvent", "evaluate_scale",
+    "FleetView", "RightsizingService", "TickRecord",
+    "TraceSpec", "gct_trace", "jobs_trace", "replay",
+]

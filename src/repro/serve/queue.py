@@ -1,0 +1,153 @@
+"""Admission queue: rightsizing requests in, per-tick micro-batches out.
+
+A ``Request`` is one fleet perturbation — admit a new fleet, a batch of
+task arrivals, task departures, or a demand burst (the online
+arrival/departure regime of Dynamic Vector Bin Packing).  The
+``AdmissionQueue`` keeps them in strict FIFO order; each service tick
+drains a bounded prefix, coalesces it per fleet (so one fleet hit by
+five requests re-solves ONCE with all five applied), and whatever the
+tick's shape bucket cannot carry is requeued at the front with its
+original submission order — deferral never reorders a fleet's stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+__all__ = ["Request", "PendingRequest", "AdmissionQueue", "KINDS"]
+
+KINDS = ("admit", "arrive", "depart", "burst", "replan")
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One rightsizing request against one fleet.
+
+    kind='admit'  — create the fleet: dem (k, D), start/end (k,),
+        node_types, T (the fleet's node catalogue and horizon are fixed
+        at admission; task ids 0..k-1 are assigned in row order).
+    kind='arrive' — append k tasks: dem (k, D), start/end (k,); the
+        service assigns the next k ids in order.
+    kind='depart' — remove tasks by id (``ids``).
+    kind='burst'  — scale the demands of tasks ``ids`` by ``factor``
+        (clamped to the fleet's largest per-dimension capacity).
+    kind='replan' — no perturbation; force a re-solve.
+
+    >>> import numpy as np
+    >>> Request(fleet="a", kind="arrive", dem=np.ones((2, 2)),
+    ...         start=np.zeros(2), end=np.ones(2)).n_tasks
+    2
+    >>> Request(fleet="a", kind="burst", ids=(1, 2))
+    Traceback (most recent call last):
+        ...
+    ValueError: burst requests need ids and factor, got factor=None
+    """
+
+    fleet: str
+    kind: str
+    dem: np.ndarray | None = None
+    start: np.ndarray | None = None
+    end: np.ndarray | None = None
+    node_types: object | None = None
+    T: int | None = None
+    ids: tuple[int, ...] | None = None
+    factor: float | None = None
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"request kind must be one of {KINDS}, got {self.kind!r}")
+        if self.kind in ("admit", "arrive"):
+            if self.dem is None or self.start is None or self.end is None:
+                raise ValueError(
+                    f"{self.kind} requests need dem/start/end arrays")
+            if self.kind == "admit" and (self.node_types is None
+                                         or self.T is None):
+                raise ValueError(
+                    "admit requests need node_types and T (the fleet's "
+                    "catalogue and horizon are fixed at admission)")
+        if self.kind == "depart" and not self.ids:
+            raise ValueError("depart requests need a non-empty ids tuple")
+        if self.kind == "burst" and (not self.ids or self.factor is None):
+            raise ValueError(
+                f"burst requests need ids and factor, got "
+                f"factor={self.factor!r}")
+        if self.factor is not None and not self.factor > 0:
+            raise ValueError(f"factor must be positive, got {self.factor!r}")
+
+    @property
+    def n_tasks(self) -> int:
+        """Tasks this request adds (0 for depart/burst/replan)."""
+        return 0 if self.dem is None else int(np.asarray(self.dem).shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class PendingRequest:
+    """A queued request plus its admission bookkeeping: the global FIFO
+    sequence number and the submission timestamp the per-request re-plan
+    latency is measured from."""
+
+    seq: int
+    submitted_s: float
+    request: Request
+
+
+class AdmissionQueue:
+    """Strict-FIFO request queue with front-requeue for deferrals.
+
+    >>> q = AdmissionQueue()
+    >>> for f in ("a", "b", "a"):
+    ...     _ = q.push(Request(fleet=f, kind="replan"), now_s=0.0)
+    >>> taken = q.take(2)
+    >>> [p.request.fleet for p in taken], len(q)
+    (['a', 'b'], 1)
+    >>> groups = AdmissionQueue.coalesce(taken)
+    >>> list(groups)
+    ['a', 'b']
+    >>> q.requeue(taken)          # deferred tick: back to the front
+    >>> [p.request.fleet for p in q.take(3)]
+    ['a', 'b', 'a']
+    """
+
+    def __init__(self):
+        self._pending: deque[PendingRequest] = deque()
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def push(self, request: Request, now_s: float) -> PendingRequest:
+        item = PendingRequest(seq=self._seq, submitted_s=now_s,
+                              request=request)
+        self._seq += 1
+        self._pending.append(item)
+        return item
+
+    def take(self, cap: int) -> list[PendingRequest]:
+        """Pop the up-to-``cap`` oldest pending requests (FIFO)."""
+        out = []
+        while self._pending and len(out) < cap:
+            out.append(self._pending.popleft())
+        return out
+
+    def requeue(self, items: list[PendingRequest]) -> None:
+        """Push deferred requests back to the FRONT, preserving their
+        original submission order (they stay the oldest work)."""
+        for item in sorted(items, key=lambda p: p.seq, reverse=True):
+            self._pending.appendleft(item)
+
+    @staticmethod
+    def coalesce(items: list[PendingRequest]) -> dict:
+        """Group a drained prefix per fleet, preserving both the
+        per-fleet request order and the fleets' oldest-first order."""
+        groups: dict[str, list[PendingRequest]] = {}
+        for item in items:
+            groups.setdefault(item.request.fleet, []).append(item)
+        return groups

@@ -1,0 +1,465 @@
+"""``RightsizingService``: a long-lived serving loop over ``FleetEngine``.
+
+The paper solves one cold-start rightsizing instance; this module keeps
+MANY live fleets rightsized under a stream of perturbations.  One tick:
+
+  1. **Drain + coalesce** — pop a bounded FIFO prefix off the admission
+     queue and fold it per fleet, so a fleet hit by several requests
+     re-solves once with all of them applied.
+  2. **Micro-batch** — shape-bucket the touched fleets' trimmed
+     problems with the engine's own ``plan_buckets`` planner; the
+     bucket holding the *oldest* pending request becomes the tick's
+     batch, everything else requeues at the front (FIFO fairness, one
+     padded shape, ONE ``FleetEngine`` LP dispatch per tick).
+  3. **Warm re-solve** — each batched lane re-enters PDHG from its
+     fleet's previous ``PDHGState``, with task rows and trimmed time
+     slots re-aligned by id; lanes whose shape drifted past
+     ``ServiceConfig.max_shape_drift`` (or whose fleet is new) cold
+     start automatically.
+  4. **Place + decide** — one lockstep placement scan proposes node
+     counts; the flag-gated decision loop (``serve.scale``) adopts or
+     holds them, logging a structured ``ScaleEvent``.
+  5. **Account** — per-request re-plan latency, per-lane iteration
+     counts split warm/cold, dispatch counts, and wall-time phases all
+     land in the tick record; ``report()`` aggregates them into the
+     requests/sec + p99-latency telemetry the benchmarks gate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.batch import pack_problems
+from repro.core.engine import (FleetEngine, SolverConfig, SweepConfig,
+                               plan_buckets)
+from repro.core.lp_pdhg import PDHGState
+from repro.core.problem import Problem, trim_timeline
+from repro.core.solution import Solution, verify
+
+from .config import ServiceConfig
+from .queue import AdmissionQueue, PendingRequest, Request
+from .scale import ScaleEvent, evaluate_scale
+
+__all__ = ["RightsizingService", "TickRecord", "FleetView"]
+
+
+@dataclasses.dataclass
+class _LaneState:
+    """One fleet's stored solver state, cropped to its own trimmed
+    shape, plus the alignment keys (task ids, kept slot ids) the next
+    warm start re-maps it with."""
+
+    x: np.ndarray            # (n_f, m) float32, trimmed task rows
+    y: np.ndarray            # (T'_f, m, D) float32, trimmed slots
+    eta: float | None
+    ids: np.ndarray          # (n_f,) task ids, ascending
+    kept: np.ndarray         # (T'_f,) original slot ids, ascending
+
+
+@dataclasses.dataclass
+class _FleetState:
+    problem: Problem          # current task set, original timeline
+    ids: np.ndarray           # (n,) task ids, ascending
+    next_id: int
+    warm: _LaneState | None = None
+    plan: np.ndarray | None = None       # adopted node counts (m,)
+    plan_cost: float = 0.0
+    last_scale_in_tick: int = -(10**9)
+    solution: Solution | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetView:
+    """Read-only snapshot of one fleet (what ``fleet()`` returns)."""
+
+    name: str
+    n_tasks: int
+    plan: np.ndarray
+    plan_cost: float
+    solution: Solution | None
+
+
+@dataclasses.dataclass
+class TickRecord:
+    """Telemetry of one tick: who re-solved, how warm, how fast."""
+
+    tick: int
+    fleets: tuple[str, ...]
+    requests: int
+    deferred: int
+    dispatches: int
+    warm_lanes: int
+    cold_lanes: int
+    drift_fallbacks: int
+    iters: tuple[int, ...]
+    converged: int
+    solve_s: float
+    place_s: float
+    total_s: float
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fleets"] = list(self.fleets)
+        d["iters"] = list(self.iters)
+        return d
+
+
+class RightsizingService:
+    """A long-lived rightsizing loop: ``submit`` requests, ``tick``
+    until drained (or forever), read ``report()`` / ``events``.
+
+    The service derives its per-tick engine from the one it is given
+    with ``FleetEngine.with_overrides``: the sweep config is replaced
+    outright because the admission queue owns micro-batching (bucketing
+    per tick) and the per-fleet state chain owns warm starts — the
+    engine-level ``SweepConfig(warm_start=..., max_buckets=...)`` knobs
+    describe offline sweeps, not a serving loop.  The solver must be
+    tolerance-stopped: warm starts only pay off when lanes may exit
+    early.
+    """
+
+    def __init__(self, engine: FleetEngine | None = None,
+                 config: ServiceConfig | None = None):
+        self.config = config if config is not None else ServiceConfig()
+        base = engine if engine is not None else FleetEngine(
+            solver=SolverConfig(tol=5e-3, iters=4000),
+            algos=("lp-map-f",))
+        if base.solver.tol is None:
+            raise ValueError(
+                "RightsizingService needs a tolerance-stopped solver "
+                "(warm-started re-solves only pay off when lanes can "
+                "exit early); derive one with "
+                "engine.with_overrides(tol=5e-3)")
+        # the queue owns micro-batching; neutralize sweep-level knobs
+        self.engine = base.with_overrides(sweep=SweepConfig())
+        self.queue = AdmissionQueue()
+        self.events: list[ScaleEvent] = []
+        self.ticks: list[TickRecord] = []
+        self._fleets: dict[str, _FleetState] = {}
+        self._tick = 0
+        self._latencies: list[float] = []
+        self._iters: dict[str, list[int]] = {
+            "warm": [], "cold": [], "drift": [], "admit": []}
+        self._converged: list[bool] = []
+        self._proposed_cost = 0.0  # pre-decision placement cost total
+
+    # -- admission -----------------------------------------------------
+
+    def submit(self, request: Request) -> PendingRequest:
+        return self.queue.push(request, now_s=time.perf_counter())
+
+    @property
+    def fleets(self) -> tuple[str, ...]:
+        return tuple(self._fleets)
+
+    def fleet(self, name: str) -> FleetView:
+        st = self._fleets[name]
+        return FleetView(name=name, n_tasks=st.problem.n,
+                         plan=st.plan.copy(), plan_cost=st.plan_cost,
+                         solution=st.solution)
+
+    # -- request application (pure w.r.t. stored fleet state) ----------
+
+    @staticmethod
+    def _fit_demands(dem: np.ndarray, cap: np.ndarray) -> np.ndarray:
+        """Admission control: any task fitting NO node type is scaled
+        down onto its best-fitting type (smallest max demand/capacity
+        ratio), so perturbed fleets always stay feasible."""
+        dem = np.asarray(dem, dtype=float)
+        ratios = np.max(dem[:, None, :] / np.maximum(cap[None, :, :],
+                                                     1e-12), axis=2)
+        r = ratios.min(axis=1)
+        over = r > 1.0
+        if over.any():
+            dem = dem.copy()
+            dem[over] /= r[over, None] * (1.0 + 1e-9)
+        return dem
+
+    def _apply(self, st: _FleetState | None, items: list[PendingRequest]):
+        """Fold a fleet's coalesced requests into (problem, ids,
+        next_id) without mutating the stored state."""
+        if st is None:
+            problem, ids, next_id = None, None, 0
+        else:
+            problem, ids, next_id = st.problem, st.ids, st.next_id
+        for item in items:
+            req = item.request
+            if req.kind == "admit":
+                if problem is not None:
+                    raise ValueError(
+                        f"fleet {req.fleet!r} is already admitted")
+                dem = self._fit_demands(req.dem, req.node_types.cap)
+                problem = Problem(
+                    dem=dem,
+                    start=np.asarray(req.start, dtype=np.int64),
+                    end=np.asarray(req.end, dtype=np.int64),
+                    node_types=req.node_types, T=int(req.T))
+                ids = np.arange(dem.shape[0], dtype=np.int64)
+                next_id = dem.shape[0]
+                continue
+            if problem is None:
+                raise ValueError(
+                    f"fleet {req.fleet!r} got a {req.kind!r} request "
+                    f"before being admitted")
+            cap = problem.node_types.cap
+            if req.kind == "arrive":
+                dem = self._fit_demands(req.dem, cap)
+                k = dem.shape[0]
+                problem = Problem(
+                    dem=np.concatenate([problem.dem, dem]),
+                    start=np.concatenate([
+                        problem.start,
+                        np.asarray(req.start, dtype=np.int64)]),
+                    end=np.concatenate([
+                        problem.end,
+                        np.asarray(req.end, dtype=np.int64)]),
+                    node_types=problem.node_types, T=problem.T)
+                ids = np.concatenate([
+                    ids, np.arange(next_id, next_id + k, dtype=np.int64)])
+                next_id += k
+            elif req.kind == "depart":
+                keep = ~np.isin(ids, np.asarray(req.ids, dtype=np.int64))
+                if not keep.any():
+                    raise ValueError(
+                        f"depart would empty fleet {req.fleet!r}")
+                problem = Problem(
+                    dem=problem.dem[keep], start=problem.start[keep],
+                    end=problem.end[keep],
+                    node_types=problem.node_types, T=problem.T)
+                ids = ids[keep]
+            elif req.kind == "burst":
+                hit = np.isin(ids, np.asarray(req.ids, dtype=np.int64))
+                dem = problem.dem.copy()
+                dem[hit] = self._fit_demands(dem[hit] * req.factor, cap)
+                problem = Problem(
+                    dem=dem, start=problem.start, end=problem.end,
+                    node_types=problem.node_types, T=problem.T)
+            # 'replan' applies no perturbation
+        return problem, ids, next_id
+
+    # -- warm-start assembly -------------------------------------------
+
+    def _lane_init(self, st: _FleetState | None, ids, trimmed, kept,
+                   x0, y0, lane: int):
+        """Fill one lane of the batch init from the fleet's stored
+        state, task rows and kept slots re-aligned by id.  Returns the
+        lane mode and step size: ('warm', eta), or (mode, None) with
+        mode 'admit' (fresh fleet), 'cold' (warm starts off), or
+        'drift' (shape drifted past the fallback bound)."""
+        if st is None:
+            return "admit", None
+        if not self.config.warm_start or st.warm is None:
+            return "cold", None
+        ws = st.warm
+        if ws.x.shape[1] != trimmed.m or ws.y.shape[2] != trimmed.D:
+            return "drift", None
+        row_pos = np.searchsorted(ws.ids, ids)
+        row_pos = np.clip(row_pos, 0, len(ws.ids) - 1)
+        row_ok = ws.ids[row_pos] == ids
+        slot_pos = np.searchsorted(ws.kept, kept)
+        slot_pos = np.clip(slot_pos, 0, len(ws.kept) - 1)
+        slot_ok = ws.kept[slot_pos] == kept
+        overlap = min(row_ok.mean(), slot_ok.mean())
+        if overlap < 1.0 - self.config.max_shape_drift:
+            return "drift", None
+        m, d = trimmed.m, trimmed.D
+        x0[lane, np.flatnonzero(row_ok), :m] = ws.x[row_pos[row_ok]]
+        y0[lane, np.flatnonzero(slot_ok), :m, :d] = ws.y[slot_pos[slot_ok]]
+        return "warm", ws.eta
+
+    # -- one tick ------------------------------------------------------
+
+    def tick(self) -> TickRecord | None:
+        """Process one micro-batch; returns its ``TickRecord``, or
+        None when the queue is empty."""
+        t_tick = time.perf_counter()
+        taken = self.queue.take(self.config.max_requests_per_tick)
+        if not taken:
+            return None
+        groups = AdmissionQueue.coalesce(taken)
+        names = list(groups)
+
+        proposals = {}
+        for name in names:
+            problem, ids, next_id = self._apply(
+                self._fleets.get(name), groups[name])
+            trimmed, kept = trim_timeline(problem)
+            proposals[name] = (problem, ids, next_id, trimmed, kept)
+
+        # shape-bucket the touched fleets; serve the oldest request's
+        # bucket this tick, defer the rest with their order intact
+        parts = plan_buckets([proposals[n][3] for n in names],
+                             max_buckets=self.config.max_buckets,
+                             overhead=self.config.bucket_overhead)
+        chosen_idx = next(p for p in parts if 0 in p)
+        chosen = [names[i] for i in chosen_idx]
+        deferred = [item for i, n in enumerate(names) if i not in chosen_idx
+                    for item in groups[n]]
+        self.queue.requeue(deferred)
+
+        # pad task/slot dims up to the shape quantum so consecutive
+        # ticks reuse one compiled solve (padding is exact)
+        chosen_trimmed = [proposals[n][3] for n in chosen]
+        q = self.config.shape_quantum
+        pad_to = (-(-max(t.n for t in chosen_trimmed) // q) * q,
+                  max(t.m for t in chosen_trimmed),
+                  max(t.D for t in chosen_trimmed),
+                  -(-max(t.T for t in chosen_trimmed) // q) * q)
+        batch = pack_problems(chosen_trimmed, pad_to=pad_to,
+                              assume_trimmed=True)
+        x0 = np.zeros((batch.B, batch.n, batch.m), np.float32)
+        y0 = np.zeros((batch.B, batch.Tp, batch.m, batch.D), np.float32)
+        modes, etas = [], []
+        for lane, name in enumerate(chosen):
+            _, ids, _, trimmed, kept = proposals[name]
+            mode, eta = self._lane_init(self._fleets.get(name), ids,
+                                        trimmed, kept, x0, y0, lane)
+            modes.append(mode)
+            etas.append(eta)
+        init = None
+        if any(m == "warm" for m in modes):
+            eta_arr = None
+            if all(e is not None for e in etas):
+                eta_arr = np.asarray(etas, np.float32)
+            init = PDHGState(x=x0, y=y0, eta=eta_arr)
+
+        t0 = time.perf_counter()
+        lp_results, stats = self.engine.solve(batch, init=init)
+        solve_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        maps = [r.mapping for r in lp_results]
+        best: list[Solution | None] = [None] * batch.B
+        best_cost = [float("inf")] * batch.B
+        for fit in self.engine.placement.fits:
+            sols = self.engine.place(batch, maps, fit=fit,
+                                     filling=self.config.filling)
+            for lane, (t, s) in enumerate(zip(batch.problems, sols)):
+                c = s.cost(t)
+                if c < best_cost[lane]:
+                    best_cost[lane], best[lane] = c, s
+        place_s = time.perf_counter() - t0
+
+        state = stats[-1].state if stats else None
+        now = time.perf_counter()
+        for lane, name in enumerate(chosen):
+            problem, ids, next_id, trimmed, kept = proposals[name]
+            st = self._fleets.get(name)
+            sol = best[lane]
+            if self.engine.placement.check:
+                verify(trimmed, sol)
+            required = sol.nodes_per_type(trimmed)
+            self._proposed_cost += float(
+                required @ trimmed.node_types.cost)
+            decision = evaluate_scale(
+                None if st is None else st.plan, required,
+                trimmed.node_types.cost, tick=self._tick,
+                last_scale_in_tick=(-(10**9) if st is None
+                                    else st.last_scale_in_tick),
+                cfg=self.config)
+            cost_before = 0.0 if st is None else st.plan_cost
+            if st is None:
+                st = _FleetState(problem=problem, ids=ids,
+                                 next_id=next_id)
+                self._fleets[name] = st
+            else:
+                st.problem, st.ids, st.next_id = problem, ids, next_id
+            if decision.scaled_in:
+                st.last_scale_in_tick = self._tick
+            st.plan, st.plan_cost = decision.adopted, decision.cost
+            st.solution = sol
+            if state is not None:
+                st.warm = _LaneState(
+                    x=np.array(state.x[lane, :trimmed.n, :trimmed.m]),
+                    y=np.array(state.y[lane, :trimmed.T, :trimmed.m,
+                                       :trimmed.D]),
+                    eta=(None if state.eta is None
+                         else float(state.eta[lane])),
+                    ids=ids.copy(), kept=kept.copy())
+            if decision.scope != "hold" or decision.checks:
+                self.events.append(ScaleEvent(
+                    tick=self._tick, fleet=name, scope=decision.scope,
+                    cost_before=cost_before, cost_after=decision.cost,
+                    checks=decision.checks))
+
+        served = [item for n in chosen for item in groups[n]]
+        for item in served:
+            self._latencies.append(now - item.submitted_s)
+        iters = []
+        for lane, mode in enumerate(modes):
+            lane_iters = int(stats[0].iterations[lane]) if stats else 0
+            iters.append(lane_iters)
+            self._iters[mode].append(lane_iters)
+        if stats:
+            self._converged.extend(bool(c) for c in stats[0].converged)
+
+        record = TickRecord(
+            tick=self._tick, fleets=tuple(chosen), requests=len(served),
+            deferred=len(deferred), dispatches=max(1, len(stats)),
+            warm_lanes=sum(m == "warm" for m in modes),
+            cold_lanes=sum(m != "warm" for m in modes),
+            drift_fallbacks=sum(m == "drift" for m in modes),
+            iters=tuple(iters),
+            converged=(int(stats[0].converged.sum()) if stats
+                       else batch.B),
+            solve_s=solve_s, place_s=place_s,
+            total_s=time.perf_counter() - t_tick)
+        self.ticks.append(record)
+        self._tick += 1
+        return record
+
+    def drain(self, max_ticks: int = 10**6) -> int:
+        """Tick until the queue is empty; returns ticks executed."""
+        n = 0
+        while self.queue.pending and n < max_ticks:
+            if self.tick() is None:
+                break
+            n += 1
+        return n
+
+    # -- telemetry -----------------------------------------------------
+
+    def report(self) -> dict:
+        """Aggregate serving telemetry (JSON-ready): sustained
+        requests/sec, re-plan latency percentiles, warm-vs-cold
+        iteration medians, decision-loop event counts, and the
+        deterministic total adopted plan cost."""
+        lat = np.asarray(self._latencies, dtype=float)
+        wall = sum(t.total_s for t in self.ticks)
+        scopes: dict[str, int] = {}
+        for e in self.events:
+            scopes[e.scope] = scopes.get(e.scope, 0) + 1
+        resolve_cold = self._iters["cold"] + self._iters["drift"]
+
+        def _median(vals):
+            return float(np.median(vals)) if vals else None
+
+        return {
+            "ticks": len(self.ticks),
+            "fleets": len(self._fleets),
+            "requests": int(lat.size),
+            "wall_s": round(wall, 4),
+            "requests_per_s": (round(float(lat.size) / wall, 3)
+                               if wall > 0 else 0.0),
+            "p50_replan_s": (round(float(np.percentile(lat, 50)), 4)
+                             if lat.size else 0.0),
+            "p99_replan_s": (round(float(np.percentile(lat, 99)), 4)
+                             if lat.size else 0.0),
+            "dispatches_per_tick": (max(t.dispatches for t in self.ticks)
+                                    if self.ticks else 0),
+            "warm_lanes": len(self._iters["warm"]),
+            "cold_lanes": (len(resolve_cold) + len(self._iters["admit"])),
+            "drift_fallbacks": sum(t.drift_fallbacks for t in self.ticks),
+            "median_iters_warm": _median(self._iters["warm"]),
+            "median_iters_cold": _median(resolve_cold),
+            "median_iters_admit": _median(self._iters["admit"]),
+            "converged_frac": (round(float(np.mean(self._converged)), 4)
+                               if self._converged else 1.0),
+            "events": scopes,
+            "total_cost": round(sum(st.plan_cost
+                                    for st in self._fleets.values()), 6),
+            "proposed_cost_total": round(self._proposed_cost, 6),
+        }

@@ -36,7 +36,7 @@ DOC_NAMES = {
 class TestDocsSuite:
     def test_docs_files_exist(self):
         for name in ("architecture.md", "solver.md", "bucketing.md",
-                     "benchmarks.md"):
+                     "service.md", "benchmarks.md"):
             assert (REPO / "docs" / name).is_file(), f"docs/{name} missing"
 
     def test_intra_repo_links_resolve(self):

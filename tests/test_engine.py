@@ -445,3 +445,148 @@ class TestFleetResult:
         assert len(result.stats) == 2
         blob = json.loads(result.to_json())
         assert blob["plan"] is None
+
+
+class TestSweepConfigMessages:
+    """The mutual-exclusivity errors must name the config fields AND
+    point at the serving-loop alternative (the API that DOES combine
+    warm starts with per-tick shape bucketing)."""
+
+    def test_bucketing_conflict_names_fields_and_alternative(self):
+        with pytest.raises(ValueError) as ei:
+            SweepConfig(warm_start=2, max_buckets=3)
+        msg = str(ei.value)
+        assert "SweepConfig.warm_start" in msg
+        assert "SweepConfig.max_buckets" in msg
+        assert "mutually exclusive" in msg
+        assert "repro.serve.RightsizingService" in msg
+
+    def test_sharding_conflict_names_fields_and_alternative(self):
+        with pytest.raises(ValueError) as ei:
+            SweepConfig(warm_start=2, shard_size=4)
+        msg = str(ei.value)
+        assert "SweepConfig.warm_start" in msg
+        assert "SweepConfig.shard_size" in msg
+        assert "mutually exclusive" in msg
+        assert "repro.serve.RightsizingService" in msg
+
+
+class TestWithOverrides:
+    def test_routes_fields_across_config_family(self):
+        eng = FleetEngine(solver=SolverConfig(tol=5e-3, iters=900))
+        eng2 = eng.with_overrides(tol=1e-2, fit="first", max_buckets=3,
+                                  algos=("lp-map",))
+        assert eng2.solver.tol == 1e-2
+        assert eng2.solver.iters == 900        # untouched field survives
+        assert eng2.placement.fits == ("first",)
+        assert eng2.sweep.max_buckets == 3
+        assert eng2.algos == ("lp-map",)
+        # the base engine is immutable
+        assert eng.solver.tol == 5e-3 and eng.sweep.max_buckets == 1
+
+    def test_whole_config_replacement(self):
+        eng = FleetEngine(solver=SolverConfig(tol=5e-3))
+        eng2 = eng.with_overrides(sweep=SweepConfig(max_buckets=4))
+        assert eng2.sweep.max_buckets == 4
+        assert eng2.solver.tol == 5e-3
+
+    def test_whole_config_plus_field_override_composes(self):
+        eng = FleetEngine()
+        eng2 = eng.with_overrides(solver=SolverConfig(tol=5e-3),
+                                  iters=1234)
+        assert eng2.solver.tol == 5e-3 and eng2.solver.iters == 1234
+
+    def test_unknown_field_names_the_known_set(self):
+        with pytest.raises(ValueError) as ei:
+            FleetEngine().with_overrides(fuel="ion")
+        msg = str(ei.value)
+        assert "unknown field 'fuel'" in msg
+        assert "solver=/placement=/sweep=/algos=" in msg
+        assert "tol" in msg and "max_buckets" in msg
+
+    def test_derived_engine_revalidates(self):
+        eng = FleetEngine(solver=SolverConfig(tol=5e-3))
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            eng.with_overrides(warm_start=2, max_buckets=3)
+
+
+class TestSolveInitGuards:
+    def test_init_conflicts_with_warm_started_sweep(self):
+        eng = FleetEngine(solver=SolverConfig(tol=DEFAULT_TOL, iters=500),
+                          sweep=SweepConfig(warm_start=2),
+                          algos=("lp-map",))
+        problems = synthetic_batch(
+            [SyntheticSpec(n=20, m=3, D=2, T=6, seed=s) for s in range(2)])
+        _, (st,) = FleetEngine(
+            solver=SolverConfig(tol=DEFAULT_TOL, iters=500)).solve(
+                problems[:1])
+        with pytest.raises(ValueError, match="SweepConfig.warm_start"):
+            eng.solve(problems, init=st.state)
+
+    def test_init_needs_single_bucket_plan(self):
+        small = synthetic_batch([SyntheticSpec(n=8, m=2, D=2, T=4,
+                                               seed=0)])
+        large = synthetic_batch([SyntheticSpec(n=120, m=5, D=4, T=30,
+                                               seed=1)])
+        eng = FleetEngine(solver=SolverConfig(tol=DEFAULT_TOL, iters=500),
+                          sweep=SweepConfig(max_buckets=4))
+        _, (st,) = FleetEngine(
+            solver=SolverConfig(tol=DEFAULT_TOL, iters=500)).solve(small)
+        plan = eng.pack(small + large)
+        assert plan.n_buckets > 1
+        with pytest.raises(ValueError, match="single-bucket plan"):
+            eng.solve(plan, init=st.state)
+
+    def test_init_warm_resolve_matches_cold_cost(self):
+        problems = synthetic_batch(
+            [SyntheticSpec(n=24, m=4, D=3, T=8, seed=s) for s in range(3)])
+        eng = FleetEngine(solver=SolverConfig(tol=DEFAULT_TOL, iters=4000))
+        cold, cold_stats = eng.solve(problems)
+        warm, warm_stats = eng.solve(problems,
+                                     init=cold_stats[-1].state)
+        for c, w in zip(cold, warm):
+            assert w.converged
+            # same tolerance contract either way
+            assert abs(w.objective - c.objective) <= \
+                2 * DEFAULT_TOL * max(1.0, abs(c.objective))
+        # re-solving the SAME batch from its own solution exits early
+        assert sum(int(i) for s in warm_stats for i in s.iterations) <= \
+            sum(int(i) for s in cold_stats for i in s.iterations)
+
+
+class TestEvaluateManyDeprecation:
+    def _one(self):
+        return synthetic_batch([SyntheticSpec(n=16, m=3, D=2, T=6,
+                                              seed=0)])
+
+    def test_default_call_emits_no_warning(self):
+        import warnings as _w
+
+        with _w.catch_warnings():
+            _w.simplefilter("error", DeprecationWarning)
+            evaluate_many(self._one(), algos=("penalty-map-f",))
+
+    def test_legacy_kwarg_warns_with_config_equivalent(self):
+        with pytest.warns(DeprecationWarning,
+                          match=r"lp_iters -> SolverConfig\(iters=\.\.\.\)"):
+            evaluate_many(self._one(), algos=("penalty-map-f",), lp_iters=300)
+
+    def test_warning_joins_every_passed_kwarg(self):
+        with pytest.warns(DeprecationWarning) as rec:
+            evaluate_many(self._one(), algos=("penalty-map-f",),
+                          placement="loop", backend="numpy")
+        msg = str(rec[0].message)
+        assert "placement -> PlacementConfig(engine=...)" in msg
+        assert "backend -> PlacementConfig(backend=...)" in msg
+        assert "FleetEngine" in msg
+
+    def test_shim_is_bit_stable_vs_engine(self):
+        problems = self._one()
+        with pytest.warns(DeprecationWarning):
+            entries = evaluate_many(problems, algos=("lp-map",),
+                                    lp_iters=400)
+        engine = FleetEngine(solver=SolverConfig(iters=400),
+                             algos=("lp-map",))
+        result = engine.evaluate(problems)
+        assert entries[0]["costs"] == result.entries[0]["costs"]
+        assert entries[0]["lb"] == result.entries[0]["lb"]

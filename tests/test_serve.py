@@ -1,0 +1,271 @@
+"""RightsizingService tests: admission-queue FIFO/coalescing semantics,
+queue-drain determinism (same trace => same fleets), warm-vs-cold
+re-solve parity within the documented aggregate-drift bound, the
+shape-drift cold fallback, cooldown/flag transitions of the scale
+decision loop, and the replayed-trace acceptance gate (>= 200 requests
+end-to-end, ONE FleetEngine dispatch per tick, warm re-solves cheaper
+than the cold control's).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import FleetEngine, SolverConfig
+from repro.serve import (
+    AdmissionQueue,
+    Request,
+    RightsizingService,
+    ServiceConfig,
+    TraceSpec,
+    evaluate_scale,
+    gct_trace,
+    replay,
+)
+from repro.workload.gct import gct_like_instance
+
+
+def _admit_request(fleet, n=12, m=3, seed=0):
+    p = gct_like_instance(n=n, m=m, seed=seed)
+    return p, Request(fleet=fleet, kind="admit", dem=p.dem, start=p.start,
+                      end=p.end, node_types=p.node_types, T=p.T)
+
+
+def _service(**cfg):
+    return RightsizingService(config=ServiceConfig(**cfg))
+
+
+class TestRequestValidation:
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="request kind must be one of"):
+            Request(fleet="a", kind="shrink")
+
+    def test_admit_needs_catalogue(self):
+        with pytest.raises(ValueError,
+                           match="admit requests need node_types and T"):
+            Request(fleet="a", kind="admit", dem=np.ones((2, 2)),
+                    start=np.zeros(2), end=np.ones(2))
+
+    def test_depart_needs_ids(self):
+        with pytest.raises(ValueError, match="non-empty ids tuple"):
+            Request(fleet="a", kind="depart")
+
+    def test_burst_needs_factor(self):
+        with pytest.raises(ValueError, match="ids and factor"):
+            Request(fleet="a", kind="burst", ids=(1,))
+
+
+class TestAdmissionQueue:
+    def test_fifo_take_and_front_requeue(self):
+        q = AdmissionQueue()
+        reqs = [Request(fleet=f, kind="replan") for f in "abcd"]
+        items = [q.push(r, now_s=float(i)) for i, r in enumerate(reqs)]
+        first = q.take(2)
+        assert [p.seq for p in first] == [items[0].seq, items[1].seq]
+        q.requeue(first)                 # deferred work goes back in front
+        again = q.take(4)
+        assert [p.request.fleet for p in again] == list("abcd")
+
+    def test_coalesce_groups_by_fleet_in_arrival_order(self):
+        q = AdmissionQueue()
+        fleets = ["b", "a", "b", "c", "a"]
+        items = [q.push(Request(fleet=f, kind="replan"), now_s=0.0)
+                 for f in fleets]
+        groups = AdmissionQueue.coalesce(items)
+        assert list(groups) == ["b", "a", "c"]
+        assert [p.request.fleet for p in groups["b"]] == ["b", "b"]
+
+
+class TestScaleFlags:
+    cost = np.array([1.0, 3.0])
+
+    def _cfg(self, **kw):
+        base = dict(scale_in_cooldown=3, min_scale_in_savings=0.02,
+                    payback_ticks=12, reconfig_weight=0.5)
+        base.update(kw)
+        return ServiceConfig(**base)
+
+    def test_fresh_fleet_admits(self):
+        d = evaluate_scale(None, np.array([2, 1]), self.cost, tick=0,
+                           last_scale_in_tick=-10, cfg=self._cfg())
+        assert d.scope == "admit" and d.cost == pytest.approx(5.0)
+
+    def test_growth_is_never_gated(self):
+        d = evaluate_scale(np.array([1, 1]), np.array([3, 1]), self.cost,
+                           tick=0, last_scale_in_tick=0, cfg=self._cfg())
+        assert d.scope == "scale-out"
+        assert d.adopted.tolist() == [3, 1] and not d.checks
+
+    def test_cooldown_blocks_then_releases(self):
+        cfg = self._cfg(scale_in_cooldown=3)
+        args = (np.array([4, 2]), np.array([2, 2]), self.cost)
+        held = evaluate_scale(*args, tick=5, last_scale_in_tick=3, cfg=cfg)
+        assert held.scope == "hold-release"
+        assert held.adopted.tolist() == [4, 2]  # superset stays feasible
+        flags = {c.name: c for c in held.checks}
+        assert not flags["cooldown"].flag
+        assert "2 tick(s) since last scale-in" in flags["cooldown"].message
+        ok = evaluate_scale(*args, tick=6, last_scale_in_tick=3, cfg=cfg)
+        assert ok.scope == "scale-in" and ok.adopted.tolist() == [2, 2]
+
+    def test_savings_threshold_flag(self):
+        cfg = self._cfg(min_scale_in_savings=0.5)
+        d = evaluate_scale(np.array([4, 2]), np.array([3, 2]), self.cost,
+                           tick=20, last_scale_in_tick=0, cfg=cfg)
+        assert d.scope == "hold-release"
+        flags = {c.name: c.flag for c in d.checks}
+        assert flags["cooldown"] and not flags["savings"]
+
+    def test_payback_flag_rejects_thrash(self):
+        cfg = self._cfg(payback_ticks=1, reconfig_weight=10.0)
+        d = evaluate_scale(np.array([4, 2]), np.array([3, 2]), self.cost,
+                           tick=20, last_scale_in_tick=0, cfg=cfg)
+        flags = {c.name: c.flag for c in d.checks}
+        assert not flags["payback"] and d.scope == "hold-release"
+        assert "reconfiguration cost" in d.checks[2].message
+
+    def test_event_log_is_json_ready(self):
+        d = evaluate_scale(np.array([4, 2]), np.array([2, 2]), self.cost,
+                           tick=9, last_scale_in_tick=0, cfg=self._cfg())
+        assert d.scaled_in
+        from repro.serve import ScaleEvent
+        blob = ScaleEvent(tick=9, fleet="f", scope=d.scope,
+                          cost_before=10.0, cost_after=d.cost,
+                          checks=d.checks).to_dict()
+        assert blob["scope"] == "scale-in"
+        assert all(set(c) == {"name", "flag", "message"}
+                   for c in blob["checks"])
+
+
+class TestServiceLifecycle:
+    def test_needs_tolerance_stopped_solver(self):
+        eng = FleetEngine(solver=SolverConfig(iters=100),
+                          algos=("lp-map-f",))
+        with pytest.raises(ValueError, match="tolerance-stopped solver"):
+            RightsizingService(engine=eng)
+
+    def test_admit_then_warm_replan(self):
+        svc = _service(shape_quantum=4)
+        _, admit = _admit_request("gpu", n=12, m=3, seed=1)
+        svc.submit(admit)
+        rec = svc.tick()
+        assert svc.fleets == ("gpu",)
+        assert rec.cold_lanes == 1 and rec.warm_lanes == 0
+        view = svc.fleet("gpu")
+        assert view.n_tasks == 12 and view.plan_cost > 0
+        assert view.plan.sum() > 0
+        svc.submit(Request(fleet="gpu", kind="replan"))
+        rec = svc.tick()
+        assert rec.warm_lanes == 1 and rec.drift_fallbacks == 0
+
+    def test_warm_start_off_cold_resolves(self):
+        svc = _service(warm_start=False, shape_quantum=4)
+        _, admit = _admit_request("gpu", n=12, m=3, seed=1)
+        svc.submit(admit)
+        svc.tick()
+        svc.submit(Request(fleet="gpu", kind="replan"))
+        rec = svc.tick()
+        assert rec.warm_lanes == 0 and rec.cold_lanes == 1
+
+    def test_shape_drift_falls_back_cold(self):
+        svc = _service(max_shape_drift=0.5, shape_quantum=4)
+        p, admit = _admit_request("gpu", n=12, m=3, seed=1)
+        svc.submit(admit)
+        svc.tick()
+        # 16 fresh arrivals against 12 stored rows: the stored state
+        # covers only 12/28 < 50% of the new task set -> cold fallback
+        svc.submit(Request(fleet="gpu", kind="arrive",
+                           dem=np.tile(p.dem, (2, 1))[:16],
+                           start=np.tile(p.start, 2)[:16],
+                           end=np.tile(p.end, 2)[:16]))
+        rec = svc.tick()
+        assert rec.drift_fallbacks == 1 and rec.warm_lanes == 0
+        assert svc.fleet("gpu").n_tasks == 28
+
+    def test_depart_to_empty_is_an_error(self):
+        svc = _service(shape_quantum=4)
+        _, admit = _admit_request("gpu", n=4, m=3, seed=2)
+        svc.submit(admit)
+        svc.tick()
+        svc.submit(Request(fleet="gpu", kind="depart", ids=(0, 1, 2, 3)))
+        with pytest.raises(ValueError, match="depart would empty fleet"):
+            svc.tick()
+
+
+class TestQueueDrainDeterminism:
+    def test_same_trace_same_fleets(self):
+        spec = TraceSpec(fleets=2, requests=60, n0=20, m=4, seed=7)
+        trace = gct_trace(spec)
+        reports, plans = [], []
+        for _ in range(2):
+            svc = _service()
+            reports.append(replay(svc, list(trace), push_per_tick=8))
+            plans.append({f: svc.fleet(f).plan for f in svc.fleets})
+        assert reports[0]["ticks"] == reports[1]["ticks"]
+        assert reports[0]["total_cost"] == reports[1]["total_cost"]
+        assert plans[0].keys() == plans[1].keys()
+        for f in plans[0]:
+            np.testing.assert_array_equal(plans[0][f], plans[1][f])
+
+
+@pytest.fixture(scope="module")
+def paired_replay():
+    """ONE >=200-request trace replayed warm (production) and cold
+    (control) — shared by the acceptance and parity tests."""
+    spec = TraceSpec(fleets=3, requests=200, n0=28, m=5, seed=0)
+    trace = gct_trace(spec)
+    out = {}
+    for label, warm in [("warm", True), ("cold", False)]:
+        svc = RightsizingService(config=ServiceConfig(warm_start=warm))
+        out[label] = replay(svc, list(trace), push_per_tick=12)
+    return out
+
+
+class TestReplayAcceptance:
+    def test_one_dispatch_per_tick_end_to_end(self, paired_replay):
+        for rep in paired_replay.values():
+            assert rep["requests"] >= 200
+            assert rep["dispatches_per_tick"] == 1
+            assert rep["converged_frac"] == 1.0
+
+    def test_sustained_throughput_and_latency_reported(self, paired_replay):
+        rep = paired_replay["warm"]
+        assert rep["requests_per_s"] > 0.5
+        assert 0 < rep["p50_replan_s"] <= rep["p99_replan_s"]
+        assert rep["events"]           # decision loop logged transitions
+
+    def test_warm_resolves_cheaper_than_cold_control(self, paired_replay):
+        warm = paired_replay["warm"]["median_iters_warm"]
+        cold = paired_replay["cold"]["median_iters_cold"]
+        assert warm is not None and cold is not None
+        assert warm < cold
+
+    def test_warm_cold_parity_within_documented_bound(self, paired_replay):
+        w = paired_replay["warm"]["proposed_cost_total"]
+        c = paired_replay["cold"]["proposed_cost_total"]
+        drift_pct = abs(w - c) / c * 100.0
+        assert drift_pct <= ServiceConfig().cost_drift_bound_pct
+
+    def test_burst_trace_exercises_every_request_kind(self):
+        spec = TraceSpec(fleets=3, requests=200, n0=28, m=5, seed=0)
+        kinds = {r.kind for r in gct_trace(spec)}
+        assert kinds == {"admit", "arrive", "depart", "burst"}
+
+
+class TestServiceConfigValidation:
+    def test_messages_name_the_field(self):
+        with pytest.raises(ValueError,
+                           match=r"max_requests_per_tick must be >= 1"):
+            ServiceConfig(max_requests_per_tick=0)
+        with pytest.raises(ValueError,
+                           match=r"max_shape_drift must be in \[0, 1\]"):
+            ServiceConfig(max_shape_drift=1.5)
+        with pytest.raises(ValueError, match=r"payback_ticks must be >= 1"):
+            ServiceConfig(payback_ticks=0)
+
+    def test_frozen_and_replaceable(self):
+        cfg = ServiceConfig()
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            cfg.warm_start = False
+        assert not dataclasses.replace(cfg, warm_start=False).warm_start
