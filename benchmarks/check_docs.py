@@ -45,6 +45,8 @@ AUDITED_MODULES = (
     "repro.serve.queue",
     "repro.serve.scale",
     "repro.serve.service",
+    "repro.serve.snapshot",
+    "repro.serve.faults",
 )
 
 SNIPPET_FILES = ("README.md",)

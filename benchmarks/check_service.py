@@ -22,7 +22,15 @@ Reads the ``serve`` telemetry blob that ``benchmarks.run
     request/tick counts and the adopted ``total_cost`` within the same
     parity budget;
   * throughput floor and p99 re-plan latency ceiling vs the baseline
-    (generous factors — CI machines vary, real regressions are 10x).
+    (generous factors — CI machines vary, real regressions are 10x);
+  * crash-and-recover determinism (when the blob carries the crash
+    leg's keys): a replay interrupted mid-trace — checkpointed,
+    discarded, restored from disk, finished — must adopt the SAME
+    total cost as the uninterrupted run (snapshots round-trip floats
+    exactly, so the tolerance is numerical noise, not a budget), run
+    the same number of ticks, and keep its warm-lane fraction within
+    ``--max-warm-frac-drop`` of the uninterrupted run's (warm
+    ``PDHGState`` chains must survive the restart).
 
 Exit code 0 on pass, 1 on regression — wired as a CI step right after
 the convergence gate.  Regenerate the baseline intentionally by
@@ -39,7 +47,8 @@ import sys
 
 def check(cur: dict, base: dict, max_cost_drift: float | None = None,
           min_rps_factor: float = 0.2,
-          max_p99_factor: float = 5.0) -> list[str]:
+          max_p99_factor: float = 5.0,
+          max_warm_frac_drop: float = 0.05) -> list[str]:
     """Returns the list of regression messages (empty == gate passes)."""
     errs = []
     bound = (max_cost_drift if max_cost_drift is not None
@@ -88,6 +97,46 @@ def check(cur: dict, base: dict, max_cost_drift: float | None = None,
             f"p99 re-plan latency blew up: {cur['p99_replan_s']}s > "
             f"{p99_ceiling:.2f}s ({max_p99_factor}x baseline "
             f"{base['p99_replan_s']}s)")
+    if "recovered_total_cost" in cur:
+        errs.extend(check_crash_recovery(
+            cur, max_warm_frac_drop=max_warm_frac_drop))
+    return errs
+
+
+def check_crash_recovery(cur: dict,
+                         max_warm_frac_drop: float = 0.05) -> list[str]:
+    """The crash-and-recover gate: the interrupted replay must be
+    indistinguishable from the uninterrupted one (cost-exact; warm
+    lanes survive the restart).  Internal to the current blob — no
+    baseline needed."""
+    errs = []
+    if not cur.get("crashed", False):
+        errs.append(
+            f"crash leg never crashed: the trace drained in "
+            f"{cur['recovered_ticks']} tick(s) before crash_at_tick="
+            f"{cur['crash_at_tick']} — lower --crash-at so the gate "
+            f"actually exercises recovery")
+        return errs
+    for key in ("total_cost", "proposed_cost_total"):
+        got, want = cur[f"recovered_{key}"], cur[key]
+        # snapshots round-trip floats exactly; the only slack is the
+        # blob's own 6-decimal rounding
+        if abs(got - want) > 1e-9 * max(1.0, abs(want)) + 2e-6:
+            errs.append(
+                f"crash-and-recover replay diverged: recovered_{key} "
+                f"{got} != uninterrupted {want} (snapshot/restore must "
+                f"be bit-exact)")
+    if cur["recovered_ticks"] != cur["ticks"]:
+        errs.append(
+            f"crash-and-recover replay ran {cur['recovered_ticks']} "
+            f"tick(s) vs the uninterrupted {cur['ticks']} (restored "
+            f"queue/fleet state must resume the same schedule)")
+    drop = cur["warm_frac"] - cur["recovered_warm_frac"]
+    if drop > max_warm_frac_drop:
+        errs.append(
+            f"warm lanes did not survive the restart: recovered warm "
+            f"fraction {cur['recovered_warm_frac']} vs uninterrupted "
+            f"{cur['warm_frac']} (allowed drop {max_warm_frac_drop})")
     return errs
 
 
@@ -105,6 +154,10 @@ def main(argv=None) -> int:
     ap.add_argument("--max-p99-factor", type=float, default=5.0,
                     help="p99 re-plan latency ceiling as a factor of "
                          "the baseline (default 5.0)")
+    ap.add_argument("--max-warm-frac-drop", type=float, default=0.05,
+                    help="allowed warm-lane-fraction drop of the "
+                         "crash-and-recover replay vs the "
+                         "uninterrupted run (default 0.05)")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -122,7 +175,7 @@ def main(argv=None) -> int:
         return 1
 
     errs = check(cur, base, args.max_cost_drift, args.min_rps_factor,
-                 args.max_p99_factor)
+                 args.max_p99_factor, args.max_warm_frac_drop)
     print(f"service gate: {cur['requests']} requests / {cur['ticks']} "
           f"ticks, {cur['requests_per_s']} req/s, p99 "
           f"{cur['p99_replan_s']}s, dispatches/tick "
@@ -130,6 +183,12 @@ def main(argv=None) -> int:
           f"{cur['median_iters_warm']} vs cold control "
           f"{cur['median_iters_cold_control']}, proposed-cost drift "
           f"{cur['proposed_cost_drift_pct']}%")
+    if "recovered_total_cost" in cur:
+        print(f"crash-recover gate: crashed at tick "
+              f"{cur['crash_at_tick']}, recovered cost "
+              f"{cur['recovered_total_cost']} vs {cur['total_cost']}, "
+              f"warm frac {cur['recovered_warm_frac']} vs "
+              f"{cur['warm_frac']}")
     if errs:
         for e in errs:
             print(f"FAIL: {e}", file=sys.stderr)

@@ -2,12 +2,14 @@
 
     python -m benchmarks.serve_smoke [--scale quick|default|paper]
                                      [--seed 0] [--out results/ci]
+                                     [--crash-at N]
 
 Replays ONE deterministic arrival trace (``repro.serve.gct_trace``)
 through two ``RightsizingService`` instances — the production
 warm-started configuration and a ``warm_start=False`` cold control —
-and emits the ``serve`` telemetry blob the service-regression gate
-(``benchmarks.check_service``) diffs against
+plus a third crash-and-recover leg (checkpoint mid-replay, discard the
+service, restore, finish), and emits the ``serve`` telemetry blob the
+service-regression gate (``benchmarks.check_service``) diffs against
 ``results/golden/solver_stats.json``:
 
   * sustained ``requests_per_s`` and ``p50/p99_replan_s`` of the warm
@@ -20,7 +22,13 @@ and emits the ``serve`` telemetry blob the service-regression gate
   * warm-vs-cold parity of ``proposed_cost_total`` within
     ``ServiceConfig.cost_drift_bound_pct`` (both runs propose from the
     same per-tick problems, so the drift is pure epsilon-optimal
-    vertex noise).
+    vertex noise);
+  * crash-and-recover determinism: the interrupted replay's
+    ``recovered_total_cost`` / ``recovered_proposed_cost_total`` must
+    equal the uninterrupted warm run's (snapshots round-trip floats
+    exactly), and its warm-lane fraction must survive the restart.
+    ``--crash-at N`` picks the crash tick (default: mid-replay;
+    ``--crash-at 0`` disables the leg and its gate).
 
 ``benchmarks.run --serve-trace`` merges this blob under the ``"serve"``
 key of ``<out>/solver_stats.json`` so one artifact feeds both the
@@ -32,6 +40,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import tempfile
 import time
 
 _SCALES = {
@@ -42,10 +51,17 @@ _SCALES = {
 }
 
 
-def serve_smoke(scale: str = "quick", seed: int = 0) -> dict:
-    """Run the paired warm/cold replay and return the ``serve`` blob."""
+def _warm_frac(report: dict) -> float:
+    lanes = report["warm_lanes"] + report["cold_lanes"]
+    return round(report["warm_lanes"] / lanes, 4) if lanes else 0.0
+
+
+def serve_smoke(scale: str = "quick", seed: int = 0,
+                crash_at: int | None = None) -> dict:
+    """Run the paired warm/cold replay (plus the crash-and-recover leg
+    unless ``crash_at == 0``) and return the ``serve`` blob."""
     from repro.serve import (RightsizingService, ServiceConfig, TraceSpec,
-                             gct_trace, replay)
+                             gct_trace, replay, replay_with_crash)
 
     fleets, requests, n0, m, push = _SCALES[scale]
     spec = TraceSpec(fleets=fleets, requests=requests, n0=n0, m=m,
@@ -62,6 +78,25 @@ def serve_smoke(scale: str = "quick", seed: int = 0) -> dict:
     w, c = reports["warm"], reports["cold"]
     drift = (abs(w["proposed_cost_total"] - c["proposed_cost_total"])
              / c["proposed_cost_total"] * 100.0)
+    crash_blob = {}
+    if crash_at != 0:
+        crash_tick = (crash_at if crash_at is not None
+                      else max(1, w["ticks"] // 2))
+        with tempfile.TemporaryDirectory() as tmp:
+            rec, crashed = replay_with_crash(
+                RightsizingService(),
+                list(trace), crash_after_ticks=crash_tick,
+                snapshot_dir=os.path.join(tmp, "snap"),
+                push_per_tick=push)
+        crash_blob = {
+            "crash_at_tick": crash_tick,
+            "crashed": crashed,
+            "recovered_ticks": rec["ticks"],
+            "recovered_total_cost": rec["total_cost"],
+            "recovered_proposed_cost_total": rec["proposed_cost_total"],
+            "warm_frac": _warm_frac(w),
+            "recovered_warm_frac": _warm_frac(rec),
+        }
     return {
         "scale": scale,
         "seed": seed,
@@ -92,6 +127,7 @@ def serve_smoke(scale: str = "quick", seed: int = 0) -> dict:
         "proposed_cost_drift_pct": round(drift, 4),
         "cost_drift_bound_pct":
             ServiceConfig().cost_drift_bound_pct,
+        **crash_blob,
     }
 
 
@@ -99,11 +135,15 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", choices=sorted(_SCALES), default="quick")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--crash-at", type=int, default=None,
+                    help="tick to crash-and-recover at (default: "
+                         "mid-replay; 0 disables the crash leg)")
     ap.add_argument("--out", default=None,
                     help="merge the blob under the 'serve' key of "
                          "<out>/solver_stats.json (default: print only)")
     args = ap.parse_args(argv)
-    blob = serve_smoke(scale=args.scale, seed=args.seed)
+    blob = serve_smoke(scale=args.scale, seed=args.seed,
+                       crash_at=args.crash_at)
     print(json.dumps(blob, indent=2))
     if args.out:
         path = os.path.join(args.out, "solver_stats.json")

@@ -190,15 +190,26 @@ def cmd_fleet(args):
 def cmd_serve(args):
     """Replay an arrival trace through a ``RightsizingService`` and
     print the serving report (requests/sec, p50/p99 re-plan latency,
-    warm-vs-cold iteration medians, decision-loop events)."""
+    warm-vs-cold iteration medians, decision-loop events).
+
+    ``--restore DIR`` resumes a checkpointed service (warm lanes,
+    adopted plans, and the pending queue carry over) before the replay;
+    ``--checkpoint DIR`` snapshots the service after it drains, so a
+    later invocation can pick up where this one stopped."""
     from repro.serve import (RightsizingService, ServiceConfig,
                              TraceSpec, gct_trace, jobs_trace, replay)
 
     engine = FleetEngine(**configs_from_flags(args), algos=("lp-map-f",))
-    service = RightsizingService(
-        engine=engine,
-        config=ServiceConfig(
-            max_requests_per_tick=args.max_requests_per_tick))
+    config = ServiceConfig(
+        max_requests_per_tick=args.max_requests_per_tick)
+    if args.restore:
+        service = RightsizingService.restore(args.restore,
+                                             engine=engine, config=config)
+        print(f"restored service from {args.restore}: "
+              f"{len(service.fleets)} fleet(s), "
+              f"{service.queue.pending} queued request(s)")
+    else:
+        service = RightsizingService(engine=engine, config=config)
     spec = TraceSpec(fleets=args.fleets, requests=args.requests,
                      seed=args.seed)
     if args.trace == "gct":
@@ -210,6 +221,9 @@ def cmd_serve(args):
           f"{args.trace} fleets ({args.push_per_tick}/tick pressure)\n")
     report = replay(service, trace, push_per_tick=args.push_per_tick)
     print(json.dumps(report, indent=2))
+    if args.checkpoint:
+        service.snapshot(args.checkpoint)
+        print(f"# service checkpointed -> {args.checkpoint}")
     return report
 
 
@@ -241,6 +255,10 @@ def run(argv=None):
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--push-per-tick", type=int, default=8)
     p.add_argument("--max-requests-per-tick", type=int, default=32)
+    p.add_argument("--checkpoint", default=None, metavar="DIR",
+                   help="snapshot the drained service to DIR")
+    p.add_argument("--restore", default=None, metavar="DIR",
+                   help="resume from a snapshot in DIR before replaying")
     p.set_defaults(func=cmd_serve, lp_tol=5e-3, lp_iters=4000)
 
     args = ap.parse_args(argv)

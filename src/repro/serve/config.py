@@ -35,6 +35,23 @@ class ServiceConfig:
         tasks reuse one compiled solve instead of recompiling per
         shape (padding is exact, so costs are unaffected).
 
+    Overload shedding / SLO admission
+        ``max_pending`` bounds the backlog: when the queue exceeds it
+        at a tick boundary, queued ``replan``s are shed with structured
+        ``ShedEvent``s (expired-deadline first, then coalesced-away,
+        then stalest) until the backlog fits again.  State-changing
+        requests (``admit``/``arrive``/``depart``/``burst``) are NEVER
+        shed.  ``None`` (the default) disables shedding.  Per-request
+        ``deadline_s`` SLOs feed the deadline-miss telemetry whether or
+        not shedding is on.
+
+    Fault handling
+        ``max_request_retries`` bounds how often a request whose
+        application (or whose tick's solve/verify) fails is retried
+        before it is quarantined with its error — a poison request
+        costs a bounded number of ticks instead of wedging the queue.
+        0 quarantines on the first failure.
+
     Warm starts
         ``warm_start`` re-enters PDHG from each fleet's previous
         ``PDHGState`` (task rows and trimmed time slots re-aligned by
@@ -89,8 +106,18 @@ class ServiceConfig:
     min_scale_in_savings: float = 0.02
     filling: bool = True
     shape_quantum: int = 8
+    max_pending: int | None = None
+    max_request_retries: int = 2
 
     def __post_init__(self):
+        if self.max_pending is not None and self.max_pending < 1:
+            raise ValueError(
+                f"max_pending must be >= 1 (or None to disable "
+                f"shedding), got {self.max_pending!r}")
+        if self.max_request_retries < 0:
+            raise ValueError(
+                f"max_request_retries must be >= 0, got "
+                f"{self.max_request_retries!r}")
         if self.max_requests_per_tick < 1:
             raise ValueError(
                 f"max_requests_per_tick must be >= 1, got "

@@ -34,6 +34,11 @@ class ScaleCheck:
         return {"name": self.name, "flag": bool(self.flag),
                 "message": self.message}
 
+    @staticmethod
+    def from_dict(d: dict) -> "ScaleCheck":
+        return ScaleCheck(name=d["name"], flag=bool(d["flag"]),
+                          message=d["message"])
+
 
 @dataclasses.dataclass(frozen=True)
 class ScaleDecision:
@@ -76,6 +81,14 @@ class ScaleEvent:
             "cost_after": round(float(self.cost_after), 6),
             "checks": [c.to_dict() for c in self.checks],
         }
+
+    @staticmethod
+    def from_dict(d: dict) -> "ScaleEvent":
+        return ScaleEvent(
+            tick=int(d["tick"]), fleet=d["fleet"], scope=d["scope"],
+            cost_before=float(d["cost_before"]),
+            cost_after=float(d["cost_after"]),
+            checks=tuple(ScaleCheck.from_dict(c) for c in d["checks"]))
 
 
 def evaluate_scale(current: np.ndarray | None, required: np.ndarray,

@@ -23,6 +23,24 @@ MANY live fleets rightsized under a stream of perturbations.  One tick:
      counts split warm/cold, dispatch counts, and wall-time phases all
      land in the tick record; ``report()`` aggregates them into the
      requests/sec + p99-latency telemetry the benchmarks gate.
+
+The loop is hardened for unattended operation:
+
+  * **Shedding** — with ``ServiceConfig.max_pending`` set, each tick
+    first sheds stale queued ``replan``s (never state-changing kinds)
+    through ``AdmissionQueue.shed``, logging ``ShedEvent``s.
+  * **Retry + quarantine** — a request whose application raises, or a
+    lane whose solve/verify fails (for real or via ``serve.faults``
+    injection), is retried up to ``max_request_retries`` times and then
+    quarantined with its error (``service.quarantined``) instead of
+    poisoning every subsequent tick; the rest of the tick's fleets are
+    unaffected.  Requests are folded one at a time, so the poison item
+    is identified exactly and already-folded prefixes still serve.
+  * **Checkpointing** — ``snapshot(path)`` / ``restore(path, engine)``
+    persist every fleet's state (including the warm ``PDHGState``
+    chain), the pending queue, and the telemetry counters, so a
+    restarted service resumes mid-trace with warm lanes intact
+    (``serve.snapshot``).
 """
 
 from __future__ import annotations
@@ -40,10 +58,12 @@ from repro.core.problem import Problem, trim_timeline
 from repro.core.solution import Solution, verify
 
 from .config import ServiceConfig
-from .queue import AdmissionQueue, PendingRequest, Request
+from .faults import FaultInjector, InjectedFault
+from .queue import AdmissionQueue, PendingRequest, Request, ShedEvent
 from .scale import ScaleEvent, evaluate_scale
 
-__all__ = ["RightsizingService", "TickRecord", "FleetView"]
+__all__ = ["RightsizingService", "TickRecord", "FleetView",
+           "QuarantineRecord"]
 
 
 @dataclasses.dataclass
@@ -82,6 +102,29 @@ class FleetView:
     solution: Solution | None
 
 
+@dataclasses.dataclass(frozen=True)
+class QuarantineRecord:
+    """One quarantined request: what failed, with which error, after
+    how many attempts (JSON-ready via ``to_dict``)."""
+
+    seq: int
+    fleet: str
+    kind: str
+    tick: int
+    attempts: int
+    error: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "QuarantineRecord":
+        return QuarantineRecord(
+            seq=int(d["seq"]), fleet=d["fleet"], kind=d["kind"],
+            tick=int(d["tick"]), attempts=int(d["attempts"]),
+            error=d["error"])
+
+
 @dataclasses.dataclass
 class TickRecord:
     """Telemetry of one tick: who re-solved, how warm, how fast."""
@@ -99,12 +142,30 @@ class TickRecord:
     solve_s: float
     place_s: float
     total_s: float
+    shed: int = 0
+    retried: int = 0
+    quarantined: int = 0
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["fleets"] = list(self.fleets)
         d["iters"] = list(self.iters)
         return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "TickRecord":
+        return TickRecord(
+            tick=int(d["tick"]), fleets=tuple(d["fleets"]),
+            requests=int(d["requests"]), deferred=int(d["deferred"]),
+            dispatches=int(d["dispatches"]),
+            warm_lanes=int(d["warm_lanes"]),
+            cold_lanes=int(d["cold_lanes"]),
+            drift_fallbacks=int(d["drift_fallbacks"]),
+            iters=tuple(int(i) for i in d["iters"]),
+            converged=int(d["converged"]), solve_s=float(d["solve_s"]),
+            place_s=float(d["place_s"]), total_s=float(d["total_s"]),
+            shed=int(d.get("shed", 0)), retried=int(d.get("retried", 0)),
+            quarantined=int(d.get("quarantined", 0)))
 
 
 class RightsizingService:
@@ -122,7 +183,8 @@ class RightsizingService:
     """
 
     def __init__(self, engine: FleetEngine | None = None,
-                 config: ServiceConfig | None = None):
+                 config: ServiceConfig | None = None,
+                 faults: FaultInjector | None = None):
         self.config = config if config is not None else ServiceConfig()
         base = engine if engine is not None else FleetEngine(
             solver=SolverConfig(tol=5e-3, iters=4000),
@@ -135,8 +197,11 @@ class RightsizingService:
                 "engine.with_overrides(tol=5e-3)")
         # the queue owns micro-batching; neutralize sweep-level knobs
         self.engine = base.with_overrides(sweep=SweepConfig())
+        self.faults = faults
         self.queue = AdmissionQueue()
         self.events: list[ScaleEvent] = []
+        self.shed_events: list[ShedEvent] = []
+        self.quarantined: list[QuarantineRecord] = []
         self.ticks: list[TickRecord] = []
         self._fleets: dict[str, _FleetState] = {}
         self._tick = 0
@@ -145,6 +210,9 @@ class RightsizingService:
             "warm": [], "cold": [], "drift": [], "admit": []}
         self._converged: list[bool] = []
         self._proposed_cost = 0.0  # pre-decision placement cost total
+        self._attempts: dict[int, int] = {}  # seq -> failed attempts
+        self._retries = 0
+        self._deadline_misses = 0
 
     # -- admission -----------------------------------------------------
 
@@ -178,67 +246,131 @@ class RightsizingService:
             dem[over] /= r[over, None] * (1.0 + 1e-9)
         return dem
 
+    @staticmethod
+    def _known_ids(req: Request, ids: np.ndarray) -> np.ndarray:
+        """The request's target ids as int64, or ValueError naming the
+        unknown ones — an ``np.isin`` that silently matches nothing
+        would turn a client typo into a silent no-op."""
+        target = np.asarray(req.ids, dtype=np.int64)
+        unknown = target[~np.isin(target, ids)]
+        if unknown.size:
+            raise ValueError(
+                f"{req.kind} for fleet {req.fleet!r} references "
+                f"unknown task ids {sorted(unknown.tolist())} "
+                f"(live ids run 0..{int(ids.max())} minus departures)")
+        return target
+
+    def _apply_one(self, problem: Problem | None, ids, next_id: int,
+                   req: Request):
+        """Fold ONE request into (problem, ids, next_id); raises on an
+        invalid request and never mutates its inputs."""
+        if req.kind == "admit":
+            if problem is not None:
+                raise ValueError(
+                    f"fleet {req.fleet!r} is already admitted")
+            dem = self._fit_demands(req.dem, req.node_types.cap)
+            problem = Problem(
+                dem=dem,
+                start=np.asarray(req.start, dtype=np.int64),
+                end=np.asarray(req.end, dtype=np.int64),
+                node_types=req.node_types, T=int(req.T))
+            return problem, np.arange(dem.shape[0], dtype=np.int64), \
+                dem.shape[0]
+        if problem is None:
+            raise ValueError(
+                f"fleet {req.fleet!r} got a {req.kind!r} request "
+                f"before being admitted")
+        cap = problem.node_types.cap
+        if req.kind == "arrive":
+            dem = self._fit_demands(req.dem, cap)
+            k = dem.shape[0]
+            problem = Problem(
+                dem=np.concatenate([problem.dem, dem]),
+                start=np.concatenate([
+                    problem.start,
+                    np.asarray(req.start, dtype=np.int64)]),
+                end=np.concatenate([
+                    problem.end,
+                    np.asarray(req.end, dtype=np.int64)]),
+                node_types=problem.node_types, T=problem.T)
+            ids = np.concatenate([
+                ids, np.arange(next_id, next_id + k, dtype=np.int64)])
+            next_id += k
+        elif req.kind == "depart":
+            keep = ~np.isin(ids, self._known_ids(req, ids))
+            if not keep.any():
+                raise ValueError(
+                    f"depart would empty fleet {req.fleet!r}")
+            problem = Problem(
+                dem=problem.dem[keep], start=problem.start[keep],
+                end=problem.end[keep],
+                node_types=problem.node_types, T=problem.T)
+            ids = ids[keep]
+        elif req.kind == "burst":
+            hit = np.isin(ids, self._known_ids(req, ids))
+            dem = problem.dem.copy()
+            dem[hit] = self._fit_demands(dem[hit] * req.factor, cap)
+            problem = Problem(
+                dem=dem, start=problem.start, end=problem.end,
+                node_types=problem.node_types, T=problem.T)
+        # 'replan' applies no perturbation
+        return problem, ids, next_id
+
     def _apply(self, st: _FleetState | None, items: list[PendingRequest]):
-        """Fold a fleet's coalesced requests into (problem, ids,
-        next_id) without mutating the stored state."""
+        """Fold a fleet's coalesced requests one at a time into
+        (problem, ids, next_id) without mutating the stored state.
+
+        Returns ``(problem, ids, next_id, applied, poison, rest)``:
+        ``applied`` is the folded prefix, and when an item raises (a
+        real validation error or an injected 'apply-raise' fault) it
+        becomes ``poison = (item, error)`` with the unapplied tail in
+        ``rest`` — the caller serves the prefix and routes the poison
+        through retry/quarantine, so one bad request never blocks the
+        stream behind it."""
         if st is None:
             problem, ids, next_id = None, None, 0
         else:
             problem, ids, next_id = st.problem, st.ids, st.next_id
-        for item in items:
+        applied: list[PendingRequest] = []
+        for pos, item in enumerate(items):
             req = item.request
-            if req.kind == "admit":
-                if problem is not None:
-                    raise ValueError(
-                        f"fleet {req.fleet!r} is already admitted")
-                dem = self._fit_demands(req.dem, req.node_types.cap)
-                problem = Problem(
-                    dem=dem,
-                    start=np.asarray(req.start, dtype=np.int64),
-                    end=np.asarray(req.end, dtype=np.int64),
-                    node_types=req.node_types, T=int(req.T))
-                ids = np.arange(dem.shape[0], dtype=np.int64)
-                next_id = dem.shape[0]
-                continue
-            if problem is None:
-                raise ValueError(
-                    f"fleet {req.fleet!r} got a {req.kind!r} request "
-                    f"before being admitted")
-            cap = problem.node_types.cap
-            if req.kind == "arrive":
-                dem = self._fit_demands(req.dem, cap)
-                k = dem.shape[0]
-                problem = Problem(
-                    dem=np.concatenate([problem.dem, dem]),
-                    start=np.concatenate([
-                        problem.start,
-                        np.asarray(req.start, dtype=np.int64)]),
-                    end=np.concatenate([
-                        problem.end,
-                        np.asarray(req.end, dtype=np.int64)]),
-                    node_types=problem.node_types, T=problem.T)
-                ids = np.concatenate([
-                    ids, np.arange(next_id, next_id + k, dtype=np.int64)])
-                next_id += k
-            elif req.kind == "depart":
-                keep = ~np.isin(ids, np.asarray(req.ids, dtype=np.int64))
-                if not keep.any():
-                    raise ValueError(
-                        f"depart would empty fleet {req.fleet!r}")
-                problem = Problem(
-                    dem=problem.dem[keep], start=problem.start[keep],
-                    end=problem.end[keep],
-                    node_types=problem.node_types, T=problem.T)
-                ids = ids[keep]
-            elif req.kind == "burst":
-                hit = np.isin(ids, np.asarray(req.ids, dtype=np.int64))
-                dem = problem.dem.copy()
-                dem[hit] = self._fit_demands(dem[hit] * req.factor, cap)
-                problem = Problem(
-                    dem=dem, start=problem.start, end=problem.end,
-                    node_types=problem.node_types, T=problem.T)
-            # 'replan' applies no perturbation
-        return problem, ids, next_id
+            try:
+                if self.faults is not None and self.faults.fire(
+                        "apply-raise", fleet=req.fleet, tick=self._tick):
+                    raise InjectedFault(
+                        f"injected failure applying {req.kind!r} to "
+                        f"fleet {req.fleet!r}")
+                problem, ids, next_id = self._apply_one(
+                    problem, ids, next_id, req)
+            except Exception as error:
+                return (problem, ids, next_id, applied, (item, error),
+                        items[pos + 1:])
+            applied.append(item)
+        return problem, ids, next_id, applied, None, []
+
+    def _note_failure(self, items: list[PendingRequest],
+                      error: Exception):
+        """Retry/quarantine bookkeeping for failed requests: each item
+        is retried (requeued by the caller) until it has failed
+        ``max_request_retries + 1`` times, then quarantined with its
+        error.  Returns ``(retry_items, n_quarantined)``."""
+        retry: list[PendingRequest] = []
+        n_quarantined = 0
+        for item in items:
+            fails = self._attempts.get(item.seq, 0) + 1
+            if fails > self.config.max_request_retries:
+                self._attempts.pop(item.seq, None)
+                self.quarantined.append(QuarantineRecord(
+                    seq=item.seq, fleet=item.request.fleet,
+                    kind=item.request.kind, tick=self._tick,
+                    attempts=fails,
+                    error=f"{type(error).__name__}: {error}"))
+                n_quarantined += 1
+            else:
+                self._attempts[item.seq] = fails
+                self._retries += 1
+                retry.append(item)
+        return retry, n_quarantined
 
     # -- warm-start assembly -------------------------------------------
 
@@ -272,32 +404,96 @@ class RightsizingService:
 
     # -- one tick ------------------------------------------------------
 
+    @staticmethod
+    def _aggregate_stats(stats):
+        """Per-lane telemetry across ALL of the solve's stats entries.
+
+        A sharded dispatch partitions the batch's lanes across several
+        ``SolveStats`` in order, so reading ``stats[0]`` for iteration
+        counts but ``stats[-1]`` for the warm state silently mixes
+        lanes.  Returns ``(iters (B,), converged (B,), lane_state)``
+        where ``lane_state[b]`` is ``(state, local_index)`` for lane
+        ``b`` (or None), or ``None`` when there are no stats at all.
+        """
+        if not stats:
+            return None
+        iters = np.concatenate(
+            [np.asarray(s.iterations).reshape(-1) for s in stats])
+        conv = np.concatenate(
+            [np.asarray(s.converged).reshape(-1) for s in stats])
+        lane_state = []
+        for s in stats:
+            b = int(np.asarray(s.iterations).reshape(-1).shape[0])
+            for j in range(b):
+                lane_state.append(
+                    None if s.state is None else (s.state, j))
+        return iters, conv, lane_state
+
     def tick(self) -> TickRecord | None:
         """Process one micro-batch; returns its ``TickRecord``, or
-        None when the queue is empty."""
+        None when the queue is empty.
+
+        A tick whose every drained request fails application still
+        returns a (solve-free) record — returning None there would
+        stall ``drain`` with poison retries left in the queue.
+        """
         t_tick = time.perf_counter()
+        n_shed = 0
+        if self.config.max_pending is not None:
+            shed = self.queue.shed(
+                now_s=time.perf_counter(),
+                max_pending=self.config.max_pending, tick=self._tick)
+            self.shed_events.extend(shed)
+            n_shed = len(shed)
         taken = self.queue.take(self.config.max_requests_per_tick)
         if not taken:
             return None
         groups = AdmissionQueue.coalesce(taken)
-        names = list(groups)
 
         proposals = {}
-        for name in names:
-            problem, ids, next_id = self._apply(
-                self._fleets.get(name), groups[name])
+        served_items: dict[str, list[PendingRequest]] = {}
+        n_retried = n_quarantined = 0
+        for name in list(groups):
+            st = self._fleets.get(name)
+            problem, ids, next_id, applied, poison, rest = self._apply(
+                st, groups[name])
+            if poison is not None:
+                item, error = poison
+                retry, nq = self._note_failure([item], error)
+                n_retried += len(retry)
+                n_quarantined += nq
+                self.queue.requeue(retry + rest)
+            if problem is None or (not applied and st is not None):
+                # nothing new to solve: the fleet's only requests this
+                # tick failed (or a fresh fleet's admit did)
+                continue
             trimmed, kept = trim_timeline(problem)
             proposals[name] = (problem, ids, next_id, trimmed, kept)
+            served_items[name] = applied
+        names = list(proposals)
+        if not names:
+            record = TickRecord(
+                tick=self._tick, fleets=(), requests=0, deferred=0,
+                dispatches=0, warm_lanes=0, cold_lanes=0,
+                drift_fallbacks=0, iters=(), converged=0, solve_s=0.0,
+                place_s=0.0, total_s=time.perf_counter() - t_tick,
+                shed=n_shed, retried=n_retried,
+                quarantined=n_quarantined)
+            self.ticks.append(record)
+            self._tick += 1
+            return record
 
         # shape-bucket the touched fleets; serve the oldest request's
         # bucket this tick, defer the rest with their order intact
+        # (deferral requeues only the successfully-applied items — a
+        # poisoned item was already routed through retry/quarantine)
         parts = plan_buckets([proposals[n][3] for n in names],
                              max_buckets=self.config.max_buckets,
                              overhead=self.config.bucket_overhead)
         chosen_idx = next(p for p in parts if 0 in p)
         chosen = [names[i] for i in chosen_idx]
         deferred = [item for i, n in enumerate(names) if i not in chosen_idx
-                    for item in groups[n]]
+                    for item in served_items[n]]
         self.queue.requeue(deferred)
 
         # pad task/slot dims up to the shape quantum so consecutive
@@ -343,14 +539,45 @@ class RightsizingService:
                     best_cost[lane], best[lane] = c, s
         place_s = time.perf_counter() - t0
 
-        state = stats[-1].state if stats else None
+        agg = self._aggregate_stats(stats)
+        lane_iters_all, lane_conv, lane_state = (
+            agg if agg is not None else (None, None, None))
         now = time.perf_counter()
+        served: list[PendingRequest] = []
+        committed = [False] * len(chosen)
         for lane, name in enumerate(chosen):
             problem, ids, next_id, trimmed, kept = proposals[name]
             st = self._fleets.get(name)
             sol = best[lane]
-            if self.engine.placement.check:
-                verify(trimmed, sol)
+            failure: Exception | None = None
+            if self.faults is not None and self.faults.fire(
+                    "nonconverge", fleet=name, tick=self._tick):
+                failure = InjectedFault(
+                    f"injected solver non-convergence for fleet "
+                    f"{name!r}")
+            elif self.faults is not None and self.faults.fire(
+                    "verify-fail", fleet=name, tick=self._tick):
+                failure = InjectedFault(
+                    f"injected placement verify failure for fleet "
+                    f"{name!r}")
+            elif self.engine.placement.check:
+                try:
+                    verify(trimmed, sol)
+                except AssertionError as e:
+                    failure = e
+            if failure is not None:
+                # do NOT commit; drop the stored warm state so the
+                # retry cold-starts with a fresh step size, and route
+                # the lane's requests through retry/quarantine
+                if st is not None:
+                    st.warm = None
+                retry, nq = self._note_failure(served_items[name],
+                                               failure)
+                n_retried += len(retry)
+                n_quarantined += nq
+                self.queue.requeue(retry)
+                continue
+            committed[lane] = True
             required = sol.nodes_per_type(trimmed)
             self._proposed_cost += float(
                 required @ trimmed.node_types.cost)
@@ -371,42 +598,58 @@ class RightsizingService:
                 st.last_scale_in_tick = self._tick
             st.plan, st.plan_cost = decision.adopted, decision.cost
             st.solution = sol
-            if state is not None:
+            if lane_state is not None and lane_state[lane] is not None:
+                state, local = lane_state[lane]
                 st.warm = _LaneState(
-                    x=np.array(state.x[lane, :trimmed.n, :trimmed.m]),
-                    y=np.array(state.y[lane, :trimmed.T, :trimmed.m,
+                    x=np.array(state.x[local, :trimmed.n, :trimmed.m]),
+                    y=np.array(state.y[local, :trimmed.T, :trimmed.m,
                                        :trimmed.D]),
                     eta=(None if state.eta is None
-                         else float(state.eta[lane])),
+                         else float(state.eta[local])),
                     ids=ids.copy(), kept=kept.copy())
             if decision.scope != "hold" or decision.checks:
                 self.events.append(ScaleEvent(
                     tick=self._tick, fleet=name, scope=decision.scope,
                     cost_before=cost_before, cost_after=decision.cost,
                     checks=decision.checks))
+            served.extend(served_items[name])
 
-        served = [item for n in chosen for item in groups[n]]
         for item in served:
             self._latencies.append(now - item.submitted_s)
+            self._attempts.pop(item.seq, None)
+            if item.expired(now):
+                self._deadline_misses += 1
         iters = []
         for lane, mode in enumerate(modes):
-            lane_iters = int(stats[0].iterations[lane]) if stats else 0
+            lane_iters = (int(lane_iters_all[lane])
+                          if lane_iters_all is not None else 0)
             iters.append(lane_iters)
-            self._iters[mode].append(lane_iters)
-        if stats:
-            self._converged.extend(bool(c) for c in stats[0].converged)
+            if committed[lane]:
+                self._iters[mode].append(lane_iters)
+        if lane_conv is not None:
+            self._converged.extend(
+                bool(lane_conv[lane]) for lane in range(len(chosen))
+                if committed[lane])
 
         record = TickRecord(
-            tick=self._tick, fleets=tuple(chosen), requests=len(served),
-            deferred=len(deferred), dispatches=max(1, len(stats)),
-            warm_lanes=sum(m == "warm" for m in modes),
-            cold_lanes=sum(m != "warm" for m in modes),
-            drift_fallbacks=sum(m == "drift" for m in modes),
+            tick=self._tick, fleets=tuple(
+                n for lane, n in enumerate(chosen) if committed[lane]),
+            requests=len(served),
+            deferred=len(deferred), dispatches=len(stats),
+            warm_lanes=sum(m == "warm" for lane, m in enumerate(modes)
+                           if committed[lane]),
+            cold_lanes=sum(m != "warm" for lane, m in enumerate(modes)
+                           if committed[lane]),
+            drift_fallbacks=sum(
+                m == "drift" for lane, m in enumerate(modes)
+                if committed[lane]),
             iters=tuple(iters),
-            converged=(int(stats[0].converged.sum()) if stats
-                       else batch.B),
+            converged=(int(lane_conv.sum()) if lane_conv is not None
+                       else 0),
             solve_s=solve_s, place_s=place_s,
-            total_s=time.perf_counter() - t_tick)
+            total_s=time.perf_counter() - t_tick,
+            shed=n_shed, retried=n_retried,
+            quarantined=n_quarantined)
         self.ticks.append(record)
         self._tick += 1
         return record
@@ -420,6 +663,31 @@ class RightsizingService:
             n += 1
         return n
 
+    # -- checkpoint / recovery -----------------------------------------
+
+    def snapshot(self, path: str) -> dict:
+        """Write a versioned checkpoint (JSON manifest + npz arrays) of
+        every fleet's state — problem, task ids, adopted plan, the
+        cropped warm ``PDHGState`` with its alignment keys — plus the
+        pending queue and telemetry counters.  Returns the manifest.
+        See ``serve.snapshot`` for the format."""
+        from .snapshot import save_snapshot
+        return save_snapshot(self, path)
+
+    @classmethod
+    def restore(cls, path: str, engine: FleetEngine | None = None,
+                config: ServiceConfig | None = None,
+                faults: FaultInjector | None = None
+                ) -> "RightsizingService":
+        """Rebuild a service from ``snapshot(path)`` and resume: warm
+        lanes, adopted plans, queue contents, and report() counters all
+        carry over.  ``engine`` defaults to the service default (the
+        snapshot does not capture engine internals); ``config``
+        overrides the snapshotted ``ServiceConfig``."""
+        from .snapshot import restore_service
+        return restore_service(path, engine=engine, config=config,
+                               faults=faults)
+
     # -- telemetry -----------------------------------------------------
 
     def report(self) -> dict:
@@ -432,6 +700,9 @@ class RightsizingService:
         scopes: dict[str, int] = {}
         for e in self.events:
             scopes[e.scope] = scopes.get(e.scope, 0) + 1
+        shed_reasons: dict[str, int] = {}
+        for s in self.shed_events:
+            shed_reasons[s.reason] = shed_reasons.get(s.reason, 0) + 1
         resolve_cold = self._iters["cold"] + self._iters["drift"]
 
         def _median(vals):
@@ -459,6 +730,11 @@ class RightsizingService:
             "converged_frac": (round(float(np.mean(self._converged)), 4)
                                if self._converged else 1.0),
             "events": scopes,
+            "shed": len(self.shed_events),
+            "shed_reasons": shed_reasons,
+            "retries": self._retries,
+            "quarantined": len(self.quarantined),
+            "deadline_misses": self._deadline_misses,
             "total_cost": round(sum(st.plan_cost
                                     for st in self._fleets.values()), 6),
             "proposed_cost_total": round(self._proposed_cost, 6),

@@ -13,7 +13,11 @@ same fleets.
 
 ``replay`` pushes the trace into a ``RightsizingService`` in bounded
 chunks and ticks until drained — the benchmark harness for sustained
-requests/sec and p99 re-plan latency.
+requests/sec and p99 re-plan latency.  ``replay_with_crash`` is the
+crash-and-recover variant: it snapshots mid-replay, throws the live
+service away, restores from the checkpoint, and finishes the trace —
+because the snapshot round-trips every float exactly, the recovered
+run adopts the same plans at the same costs as an uninterrupted one.
 """
 
 from __future__ import annotations
@@ -30,7 +34,8 @@ from repro.workload.jobs import (BUILTIN_DEMANDS, HBM_PER_CHIP_GB,
 
 from .queue import Request
 
-__all__ = ["TraceSpec", "gct_trace", "jobs_trace", "replay"]
+__all__ = ["TraceSpec", "gct_trace", "jobs_trace", "replay",
+           "replay_with_crash"]
 
 _MIN_FLEET_TASKS = 8  # departures never shrink a fleet below this
 
@@ -189,3 +194,49 @@ def replay(service, requests: list[Request],
         if service.tick() is None and i >= len(requests):
             break
     return service.report()
+
+
+def replay_with_crash(service, requests: list[Request], *,
+                      crash_after_ticks: int, snapshot_dir: str,
+                      push_per_tick: int = 8,
+                      engine=None) -> tuple[dict, bool]:
+    """``replay``, interrupted: after ``crash_after_ticks`` ticks the
+    service is checkpointed to ``snapshot_dir``, the live object is
+    DISCARDED (simulating a process crash — only the snapshot
+    survives), a fresh service is restored from disk, and the replay
+    finishes from the same trace position with the restored service's
+    recovered queue.
+
+    Returns ``(report, crashed)`` — ``crashed`` is False when the
+    trace drained in fewer than ``crash_after_ticks`` ticks, in which
+    case the report is just an uninterrupted replay's.  Snapshots
+    round-trip all plan/warm-state floats exactly, so a crashed-and-
+    recovered replay reports the same ``total_cost`` and
+    ``proposed_cost_total`` as an uninterrupted one (wall-clock
+    telemetry differs; downtime is excluded from re-plan latency).
+    """
+    from .service import RightsizingService
+
+    if crash_after_ticks < 1:
+        raise ValueError(
+            f"crash_after_ticks must be >= 1, got {crash_after_ticks!r}")
+    svc = service
+    i = ticks = 0
+    crashed = False
+    while i < len(requests) or svc.queue.pending:
+        chunk = requests[i:i + push_per_tick]
+        for req in chunk:
+            svc.submit(req)
+        i += len(chunk) if chunk else 0
+        if svc.tick() is None and i >= len(requests):
+            break
+        ticks += 1
+        if not crashed and ticks >= crash_after_ticks:
+            svc.snapshot(snapshot_dir)
+            restore_engine = engine if engine is not None else svc.engine
+            faults = svc.faults
+            del svc  # the crash: all in-memory state is gone
+            svc = RightsizingService.restore(
+                snapshot_dir, engine=restore_engine, faults=faults)
+            crashed = True
+    return svc.report(), crashed

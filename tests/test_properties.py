@@ -3,6 +3,10 @@
 import numpy as np
 import pytest
 
+# env-gated skip (audited): hypothesis is an optional 'test' extra
+# absent from the minimal CI image; every module here is property-based
+# so a module-level importorskip is correct (mixed modules guard
+# per-test instead — see tests/test_serve_snapshot.py)
 pytest.importorskip("hypothesis", reason="install the 'test' extra")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 

@@ -1,10 +1,12 @@
 """RightsizingService tests: admission-queue FIFO/coalescing semantics,
-queue-drain determinism (same trace => same fleets), warm-vs-cold
-re-solve parity within the documented aggregate-drift bound, the
-shape-drift cold fallback, cooldown/flag transitions of the scale
-decision loop, and the replayed-trace acceptance gate (>= 200 requests
-end-to-end, ONE FleetEngine dispatch per tick, warm re-solves cheaper
-than the cold control's).
+request validation (non-finite payloads, unknown task ids), the
+overload shed policy and its never-drop guarantee, retry/quarantine of
+poison requests, queue-drain determinism (same trace => same fleets),
+warm-vs-cold re-solve parity within the documented aggregate-drift
+bound, the shape-drift cold fallback, cooldown/flag transitions of the
+scale decision loop, and the replayed-trace acceptance gate (>= 200
+requests end-to-end, ONE FleetEngine dispatch per tick, warm re-solves
+cheaper than the cold control's).
 """
 
 import dataclasses
@@ -14,10 +16,12 @@ import pytest
 
 from repro.core import FleetEngine, SolverConfig
 from repro.serve import (
+    NEVER_SHED_KINDS,
     AdmissionQueue,
     Request,
     RightsizingService,
     ServiceConfig,
+    ShedEvent,
     TraceSpec,
     evaluate_scale,
     gct_trace,
@@ -55,6 +59,29 @@ class TestRequestValidation:
         with pytest.raises(ValueError, match="ids and factor"):
             Request(fleet="a", kind="burst", ids=(1,))
 
+    @pytest.mark.parametrize("factor", [float("inf"), float("nan"),
+                                        0.0, -2.0])
+    def test_factor_must_be_positive_and_finite(self, factor):
+        # 'not inf > 0' is False: a bare positivity test lets inf
+        # through, and _fit_demands then silently zeroes the demands
+        with pytest.raises(ValueError,
+                           match="factor must be positive and finite"):
+            Request(fleet="a", kind="burst", ids=(1,), factor=factor)
+
+    @pytest.mark.parametrize("field", ["dem", "start", "end"])
+    def test_nonfinite_payload_rejected(self, field):
+        payload = dict(dem=np.ones((2, 2)), start=np.zeros(2),
+                       end=np.ones(2))
+        payload[field] = np.asarray(payload[field], dtype=float)
+        payload[field].flat[0] = np.nan
+        with pytest.raises(ValueError, match=f"{field} must be finite"):
+            Request(fleet="a", kind="arrive", **payload)
+
+    @pytest.mark.parametrize("deadline", [0.0, -1.0, float("inf")])
+    def test_deadline_must_be_positive_and_finite(self, deadline):
+        with pytest.raises(ValueError, match="deadline_s must be"):
+            Request(fleet="a", kind="replan", deadline_s=deadline)
+
 
 class TestAdmissionQueue:
     def test_fifo_take_and_front_requeue(self):
@@ -75,6 +102,60 @@ class TestAdmissionQueue:
         groups = AdmissionQueue.coalesce(items)
         assert list(groups) == ["b", "a", "c"]
         assert [p.request.fleet for p in groups["b"]] == ["b", "b"]
+
+
+class TestShedPolicy:
+    def test_shed_events_refuse_state_changing_kinds(self):
+        # the never-drop guarantee is structural: the event type itself
+        # cannot name an admit/arrive/depart/burst
+        for kind in NEVER_SHED_KINDS:
+            with pytest.raises(ValueError, match="only ever name"):
+                ShedEvent(tick=0, seq=0, fleet="a", kind=kind,
+                          reason="pressure", waited_s=0.0)
+
+    def test_state_changing_backlog_is_never_shed(self):
+        q = AdmissionQueue()
+        for i in range(6):
+            q.push(Request(fleet=f"f{i}", kind="burst", ids=(0,),
+                           factor=1.5), now_s=0.0)
+        events = q.shed(now_s=100.0, max_pending=2, tick=0)
+        assert events == [] and q.pending == 6
+
+    def test_expired_replans_shed_regardless_of_pressure(self):
+        q = AdmissionQueue()
+        q.push(Request(fleet="a", kind="replan", deadline_s=1.0),
+               now_s=0.0)
+        q.push(Request(fleet="b", kind="replan"), now_s=0.0)
+        events = q.shed(now_s=50.0, max_pending=10, tick=3)
+        assert [e.reason for e in events] == ["deadline"]
+        assert events[0].fleet == "a" and q.pending == 1
+
+    def test_coalesced_wave_prefers_redundant_replans(self):
+        q = AdmissionQueue()
+        q.push(Request(fleet="a", kind="replan"), now_s=0.0)
+        q.push(Request(fleet="a", kind="burst", ids=(0,), factor=1.5),
+               now_s=0.0)
+        q.push(Request(fleet="b", kind="replan"), now_s=0.0)
+        events = q.shed(now_s=1.0, max_pending=2, tick=0)
+        # fleet a's replan is redundant (its burst forces the
+        # re-solve); fleet b's lone replan survives
+        assert [(e.fleet, e.reason) for e in events] == \
+            [("a", "coalesced")]
+        assert q.pending == 2
+
+    def test_pressure_wave_drops_stalest_first(self):
+        q = AdmissionQueue()
+        for i in range(4):
+            q.push(Request(fleet=f"f{i}", kind="replan"), now_s=float(i))
+        events = q.shed(now_s=10.0, max_pending=2, tick=0)
+        assert [e.reason for e in events] == ["pressure", "pressure"]
+        assert [e.fleet for e in events] == ["f0", "f1"]  # oldest first
+        assert q.pending == 2
+
+    def test_shed_event_round_trips_json(self):
+        e = ShedEvent(tick=2, seq=7, fleet="a", kind="replan",
+                      reason="pressure", waited_s=1.25)
+        assert ShedEvent.from_dict(e.to_dict()) == e
 
 
 class TestScaleFlags:
@@ -183,14 +264,75 @@ class TestServiceLifecycle:
         assert rec.drift_fallbacks == 1 and rec.warm_lanes == 0
         assert svc.fleet("gpu").n_tasks == 28
 
-    def test_depart_to_empty_is_an_error(self):
-        svc = _service(shape_quantum=4)
+    def test_depart_to_empty_quarantines_after_retries(self):
+        svc = _service(shape_quantum=4, max_request_retries=1)
         _, admit = _admit_request("gpu", n=4, m=3, seed=2)
         svc.submit(admit)
         svc.tick()
         svc.submit(Request(fleet="gpu", kind="depart", ids=(0, 1, 2, 3)))
-        with pytest.raises(ValueError, match="depart would empty fleet"):
-            svc.tick()
+        svc.drain()
+        # the invalid depart never applies: one retry, then quarantine
+        # with the validation error, fleet state untouched
+        assert svc.queue.pending == 0
+        assert len(svc.quarantined) == 1
+        q = svc.quarantined[0]
+        assert q.kind == "depart" and q.attempts == 2
+        assert "depart would empty fleet" in q.error
+        assert svc.fleet("gpu").n_tasks == 4
+        assert svc.report()["retries"] == 1
+
+    @pytest.mark.parametrize("kind,extra", [
+        ("depart", {}), ("burst", {"factor": 1.5})])
+    def test_unknown_ids_raise_instead_of_silent_noop(self, kind, extra):
+        # np.isin against ids the fleet never had matches nothing: a
+        # client typo must surface as an error, not a no-op re-solve
+        svc = _service(shape_quantum=4, max_request_retries=0)
+        _, admit = _admit_request("gpu", n=4, m=3, seed=2)
+        svc.submit(admit)
+        svc.tick()
+        svc.submit(Request(fleet="gpu", kind=kind, ids=(2, 99), **extra))
+        svc.drain()
+        assert len(svc.quarantined) == 1
+        assert "unknown task ids [99]" in svc.quarantined[0].error
+        assert svc.fleet("gpu").n_tasks == 4
+
+    def test_service_sheds_under_pressure_and_reports(self):
+        svc = _service(shape_quantum=4, max_pending=2,
+                       max_requests_per_tick=2)
+        _, admit = _admit_request("gpu", n=8, m=3, seed=3)
+        svc.submit(admit)
+        svc.tick()
+        for _ in range(5):
+            svc.submit(Request(fleet="gpu", kind="replan"))
+        svc.submit(Request(fleet="gpu", kind="burst", ids=(0,),
+                           factor=1.3))
+        svc.drain()
+        rep = svc.report()
+        assert rep["shed"] >= 3
+        assert all(e.kind == "replan" for e in svc.shed_events)
+        assert sum(rep["shed_reasons"].values()) == rep["shed"]
+        # the burst always survives shedding and was applied
+        assert any(e.reason == "coalesced" for e in svc.shed_events)
+
+    def test_deadline_misses_counted(self):
+        svc = _service(shape_quantum=4)
+        _, admit = _admit_request("gpu", n=8, m=3, seed=3)
+        svc.submit(admit)
+        svc.tick()
+        # an SLO no real solve can meet: served late -> counted miss
+        svc.submit(Request(fleet="gpu", kind="replan", deadline_s=1e-9))
+        svc.tick()
+        assert svc.report()["deadline_misses"] == 1
+
+    def test_dispatch_count_is_truthful(self):
+        svc = _service(shape_quantum=4, max_request_retries=0)
+        _, admit = _admit_request("gpu", n=8, m=3, seed=3)
+        svc.submit(admit)
+        assert svc.tick().dispatches == 1
+        # a tick whose only request fails runs no solve at all
+        svc.submit(Request(fleet="gpu", kind="depart", ids=(123,)))
+        rec = svc.tick()
+        assert rec.dispatches == 0 and rec.quarantined == 1
 
 
 class TestQueueDrainDeterminism:

@@ -1,0 +1,128 @@
+"""Fault-injection tests for the serving loop's failure paths: injector
+matching/budget semantics, retry-then-recover on transient solve and
+verify failures, quarantine of a poison request after bounded retries
+WITHOUT stalling other fleets, and exact poison isolation (the folded
+prefix of a partially-failed request group still serves).
+"""
+
+import numpy as np
+import pytest
+
+from repro.serve import (
+    FaultInjector,
+    FaultSpec,
+    Request,
+    RightsizingService,
+    ServiceConfig,
+)
+from repro.workload.gct import gct_like_instance
+
+
+def _admit(fleet, n=8, m=3, seed=0):
+    p = gct_like_instance(n=n, m=m, seed=seed)
+    return Request(fleet=fleet, kind="admit", dem=p.dem, start=p.start,
+                   end=p.end, node_types=p.node_types, T=p.T)
+
+
+def _service(faults=None, **cfg):
+    cfg.setdefault("shape_quantum", 4)
+    return RightsizingService(config=ServiceConfig(**cfg), faults=faults)
+
+
+class TestInjector:
+    def test_spec_validates_kind_and_budget(self):
+        with pytest.raises(ValueError, match="fault kind must be one of"):
+            FaultSpec(kind="oom")
+        with pytest.raises(ValueError, match="times must be >= 1"):
+            FaultSpec(kind="nonconverge", times=0)
+
+    def test_matching_respects_fleet_tick_and_budget(self):
+        inj = FaultInjector([
+            FaultSpec(kind="verify-fail", fleet="a", tick=2, times=1)])
+        assert not inj.fire("verify-fail", fleet="b", tick=2)  # fleet
+        assert not inj.fire("verify-fail", fleet="a", tick=3)  # tick
+        assert not inj.fire("nonconverge", fleet="a", tick=2)  # kind
+        assert inj.fire("verify-fail", fleet="a", tick=2)
+        assert not inj.fire("verify-fail", fleet="a", tick=2)  # spent
+        assert inj.fired == [{"kind": "verify-fail", "fleet": "a",
+                              "tick": 2, "spec": 0}]
+
+    def test_unlimited_budget(self):
+        inj = FaultInjector([FaultSpec(kind="nonconverge", times=None)])
+        assert all(inj.fire("nonconverge", fleet="x", tick=t)
+                   for t in range(5))
+
+
+class TestRetryThenRecover:
+    @pytest.mark.parametrize("kind", ["nonconverge", "verify-fail"])
+    def test_transient_lane_failure_retries_and_serves(self, kind):
+        # a one-shot fault: the first attempt fails (no commit, warm
+        # state dropped), the requeued retry succeeds cold
+        svc = _service(faults=FaultInjector([
+            FaultSpec(kind=kind, fleet="gpu", tick=1, times=1)]))
+        svc.submit(_admit("gpu", seed=1))
+        svc.tick()
+        plan_before = svc.fleet("gpu").plan
+        svc.submit(Request(fleet="gpu", kind="burst", ids=(0, 1),
+                           factor=1.5))
+        failed = svc.tick()
+        assert failed.fleets == () and failed.retried == 1
+        # the failed tick adopted nothing
+        np.testing.assert_array_equal(svc.fleet("gpu").plan, plan_before)
+        recovered = svc.tick()
+        assert recovered.fleets == ("gpu",)
+        assert recovered.warm_lanes == 0  # warm state was dropped
+        assert svc.queue.pending == 0 and not svc.quarantined
+        assert svc.report()["retries"] == 1
+
+    def test_apply_raise_transient_retries(self):
+        svc = _service(faults=FaultInjector([
+            FaultSpec(kind="apply-raise", fleet="gpu", times=1)]))
+        svc.submit(_admit("gpu", seed=1))
+        svc.drain()
+        assert svc.fleets == ("gpu",) and not svc.quarantined
+        assert svc.report()["retries"] == 1
+
+
+class TestQuarantine:
+    def test_poison_quarantines_without_stalling_other_fleets(self):
+        # fleet 'bad' fails every attempt; fleet 'ok' shares the queue
+        # and must keep serving while 'bad' burns its retry budget
+        svc = _service(max_request_retries=2, faults=FaultInjector([
+            FaultSpec(kind="apply-raise", fleet="bad", times=None)]))
+        svc.submit(_admit("bad", seed=1))
+        svc.submit(_admit("ok", seed=2))
+        ticks = svc.drain()
+        assert svc.queue.pending == 0 and ticks < 10
+        assert svc.fleets == ("ok",)
+        assert svc.fleet("ok").plan_cost > 0
+        assert len(svc.quarantined) == 1
+        q = svc.quarantined[0]
+        assert (q.fleet, q.kind, q.attempts) == ("bad", "admit", 3)
+        assert q.error.startswith("InjectedFault")
+        assert svc.report()["quarantined"] == 1
+
+    def test_zero_retries_quarantines_first_failure(self):
+        svc = _service(max_request_retries=0, faults=FaultInjector([
+            FaultSpec(kind="nonconverge", fleet="gpu", times=None)]))
+        svc.submit(_admit("gpu", seed=1))
+        svc.drain()
+        assert svc.quarantined[0].attempts == 1
+        assert "gpu" not in svc.fleets  # the admit never committed
+
+    def test_poison_isolation_serves_folded_prefix(self):
+        # [arrive, invalid depart, arrive] against one fleet: both
+        # arrivals land, only the depart quarantines
+        svc = _service(max_request_retries=0)
+        svc.submit(_admit("gpu", n=8, seed=1))
+        svc.tick()
+        p = gct_like_instance(n=2, m=3, seed=9)
+        arrive = Request(fleet="gpu", kind="arrive", dem=p.dem,
+                         start=p.start, end=p.end)
+        svc.submit(arrive)
+        svc.submit(Request(fleet="gpu", kind="depart", ids=(500,)))
+        svc.submit(arrive)
+        svc.drain()
+        assert svc.fleet("gpu").n_tasks == 12
+        assert [q.kind for q in svc.quarantined] == ["depart"]
+        assert "unknown task ids [500]" in svc.quarantined[0].error

@@ -1,0 +1,227 @@
+"""Checkpoint/recovery tests: exact snapshot round-trips (fleets,
+plans, costs, warm ``PDHGState`` chains, queue, telemetry), identical
+next-tick behavior after restore, crash-and-recover replay parity with
+an uninterrupted run, loud failures on corrupt/missing/mismatched
+snapshots, the ``serve --checkpoint/--restore`` CLI loop, and a
+Hypothesis property over random ragged fleets (skipped where
+``hypothesis`` is not installed, like ``tests/test_properties.py``).
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.serve import (
+    Request,
+    RightsizingService,
+    ServiceConfig,
+    SnapshotError,
+    TraceSpec,
+    corrupt_snapshot,
+    gct_trace,
+    replay,
+    replay_with_crash,
+)
+from repro.workload.gct import gct_like_instance
+
+
+def _admit(fleet, n=8, m=3, seed=0):
+    p = gct_like_instance(n=n, m=m, seed=seed)
+    return Request(fleet=fleet, kind="admit", dem=p.dem, start=p.start,
+                   end=p.end, node_types=p.node_types, T=p.T)
+
+
+def _busy_service():
+    """A service with live warm state, pending work, and telemetry."""
+    svc = RightsizingService(config=ServiceConfig(shape_quantum=4))
+    svc.submit(_admit("a", n=8, seed=1))
+    svc.submit(_admit("b", n=11, seed=2))
+    svc.tick()
+    svc.tick()
+    svc.submit(Request(fleet="a", kind="replan"))
+    svc.tick()
+    svc.submit(Request(fleet="b", kind="burst", ids=(0, 1), factor=1.4))
+    svc.submit(Request(fleet="a", kind="replan", deadline_s=60.0))
+    return svc
+
+
+def _assert_equal_state(a: RightsizingService, b: RightsizingService):
+    assert a.fleets == b.fleets
+    assert a._tick == b._tick
+    assert a.queue.pending == b.queue.pending
+    for name in a.fleets:
+        fa, fb = a._fleets[name], b._fleets[name]
+        np.testing.assert_array_equal(fa.problem.dem, fb.problem.dem)
+        np.testing.assert_array_equal(fa.ids, fb.ids)
+        assert fa.next_id == fb.next_id
+        np.testing.assert_array_equal(fa.plan, fb.plan)
+        assert fa.plan_cost == fb.plan_cost          # exact, not approx
+        assert (fa.warm is None) == (fb.warm is None)
+        if fa.warm is not None:
+            np.testing.assert_array_equal(fa.warm.x, fb.warm.x)
+            np.testing.assert_array_equal(fa.warm.y, fb.warm.y)
+            assert fa.warm.eta == fb.warm.eta
+            np.testing.assert_array_equal(fa.warm.ids, fb.warm.ids)
+            np.testing.assert_array_equal(fa.warm.kept, fb.warm.kept)
+    ra, rb = a.report(), b.report()
+    for key in ("ticks", "requests", "total_cost", "proposed_cost_total",
+                "warm_lanes", "cold_lanes", "events", "shed",
+                "retries", "quarantined"):
+        assert ra[key] == rb[key], key
+
+
+class TestRoundTrip:
+    def test_snapshot_restore_is_exact(self, tmp_path):
+        svc = _busy_service()
+        manifest = svc.snapshot(str(tmp_path / "snap"))
+        assert manifest["version"] == 1
+        restored = RightsizingService.restore(str(tmp_path / "snap"))
+        _assert_equal_state(svc, restored)
+
+    def test_next_tick_identical_after_restore(self, tmp_path):
+        svc = _busy_service()
+        svc.snapshot(str(tmp_path / "snap"))
+        restored = RightsizingService.restore(str(tmp_path / "snap"))
+        ra, rb = svc.tick(), restored.tick()
+        # the warm lane re-enters PDHG from bit-identical state: same
+        # modes, same iteration counts, same adopted costs
+        assert ra.warm_lanes == rb.warm_lanes
+        assert ra.iters == rb.iters
+        assert ra.fleets == rb.fleets
+        _assert_equal_state(svc, restored)
+
+    def test_snapshot_is_rewritable_and_config_overridable(self, tmp_path):
+        svc = _busy_service()
+        path = str(tmp_path / "snap")
+        svc.snapshot(path)
+        svc.tick()
+        svc.snapshot(path)                    # overwrite in place
+        restored = RightsizingService.restore(
+            path, config=ServiceConfig(shape_quantum=4, warm_start=False))
+        assert not restored.config.warm_start
+        _assert_equal_state(svc, restored)
+
+
+class TestCrashRecoverReplay:
+    def test_interrupted_replay_matches_uninterrupted(self, tmp_path):
+        spec = TraceSpec(fleets=2, requests=30, n0=16, m=4, seed=5)
+        trace = gct_trace(spec)
+        base = replay(RightsizingService(), list(trace), push_per_tick=6)
+        rec, crashed = replay_with_crash(
+            RightsizingService(), list(trace),
+            crash_after_ticks=max(1, base["ticks"] // 2),
+            snapshot_dir=str(tmp_path / "snap"), push_per_tick=6)
+        assert crashed
+        for key in ("ticks", "requests", "total_cost",
+                    "proposed_cost_total", "warm_lanes", "cold_lanes",
+                    "events"):
+            assert base[key] == rec[key], key
+
+
+class TestCorruptionAndVersioning:
+    def test_corrupt_blob_raises_snapshot_error(self, tmp_path):
+        svc = _busy_service()
+        path = str(tmp_path / "snap")
+        svc.snapshot(path)
+        corrupt_snapshot(path)
+        with pytest.raises(SnapshotError, match="corrupt"):
+            RightsizingService.restore(path)
+
+    def test_missing_blob_raises_snapshot_error(self, tmp_path):
+        svc = _busy_service()
+        path = str(tmp_path / "snap")
+        svc.snapshot(path)
+        os.remove(os.path.join(path, "arrays.npz"))
+        with pytest.raises(SnapshotError, match="missing arrays.npz"):
+            RightsizingService.restore(path)
+
+    def test_corrupt_manifest_raises_snapshot_error(self, tmp_path):
+        svc = _busy_service()
+        path = str(tmp_path / "snap")
+        svc.snapshot(path)
+        with open(os.path.join(path, "manifest.json"), "w") as f:
+            f.write('{"version": 1, "trunca')   # torn write
+        with pytest.raises(SnapshotError, match="not valid JSON"):
+            RightsizingService.restore(path)
+
+    def test_version_mismatch_raises(self, tmp_path):
+        svc = _busy_service()
+        path = str(tmp_path / "snap")
+        svc.snapshot(path)
+        mpath = os.path.join(path, "manifest.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        manifest["version"] = 99
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        with pytest.raises(SnapshotError, match="version 99"):
+            RightsizingService.restore(path)
+
+    def test_missing_directory_raises(self, tmp_path):
+        with pytest.raises(SnapshotError, match="missing"):
+            RightsizingService.restore(str(tmp_path / "nope"))
+
+
+class TestServeCli:
+    def test_checkpoint_then_restore_round_trip(self, tmp_path, capsys):
+        from repro.launch.rightsize import run
+
+        snap = str(tmp_path / "snap")
+        run(["serve", "--requests", "8", "--fleets", "2", "--seed", "3",
+             "--checkpoint", snap])
+        assert os.path.exists(os.path.join(snap, "manifest.json"))
+        capsys.readouterr()
+        run(["serve", "--requests", "8", "--fleets", "2", "--seed", "4",
+             "--restore", snap])
+        out = capsys.readouterr().out
+        assert "restored service from" in out
+        assert "2 fleet(s)" in out
+
+
+# -- Hypothesis property: restore(snapshot(s)) == s on random fleets --
+# guarded per-test (not module-level importorskip, which would skip
+# every test above it too), matching tests/test_properties.py's env
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _property_body(tmp_path_factory, data):
+    n_fleets = data.draw(st.integers(1, 3), label="fleets")
+    svc = RightsizingService(config=ServiceConfig(shape_quantum=4))
+    for i in range(n_fleets):
+        n = data.draw(st.integers(4, 14), label=f"n{i}")
+        m = data.draw(st.integers(2, 4), label=f"m{i}")
+        seed = data.draw(st.integers(0, 10**6), label=f"seed{i}")
+        svc.submit(_admit(f"f{i}", n=n, m=m, seed=seed))
+    svc.drain()
+    if data.draw(st.booleans(), label="replan"):
+        svc.submit(Request(fleet="f0", kind="replan"))
+        svc.tick()
+    path = str(tmp_path_factory.mktemp("prop") / "snap")
+    svc.snapshot(path)
+    restored = RightsizingService.restore(path)
+    _assert_equal_state(svc, restored)
+    svc.submit(Request(fleet="f0", kind="replan"))
+    restored.submit(Request(fleet="f0", kind="replan"))
+    ra, rb = svc.tick(), restored.tick()
+    assert ra.iters == rb.iters and ra.warm_lanes == rb.warm_lanes
+    _assert_equal_state(svc, restored)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None)
+    @given(data=st.data())
+    def test_property_round_trip_random_ragged_fleets(
+            tmp_path_factory, data):
+        _property_body(tmp_path_factory, data)
+else:
+    @pytest.mark.skip(
+        reason="hypothesis not installed in this environment")
+    def test_property_round_trip_random_ragged_fleets():
+        pass
