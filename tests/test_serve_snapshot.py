@@ -63,6 +63,7 @@ def _assert_equal_state(a: RightsizingService, b: RightsizingService):
             np.testing.assert_array_equal(fa.warm.x, fb.warm.x)
             np.testing.assert_array_equal(fa.warm.y, fb.warm.y)
             assert fa.warm.eta == fb.warm.eta
+            assert fa.warm.omega == fb.warm.omega
             np.testing.assert_array_equal(fa.warm.ids, fb.warm.ids)
             np.testing.assert_array_equal(fa.warm.kept, fb.warm.kept)
     ra, rb = a.report(), b.report()
