@@ -47,6 +47,9 @@ AUDITED_MODULES = (
     "repro.serve.service",
     "repro.serve.snapshot",
     "repro.serve.faults",
+    "repro.stochastic.forecast",
+    "repro.stochastic.scenarios",
+    "repro.stochastic.select",
 )
 
 SNIPPET_FILES = ("README.md",)

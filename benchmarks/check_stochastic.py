@@ -1,0 +1,160 @@
+"""Stochastic-rightsizing regression gate.
+
+    python -m benchmarks.check_stochastic results/ci/solver_stats.json \
+        results/golden/stochastic.json
+
+Reads the ``stochastic`` blob that ``benchmarks.run`` (via the
+``fleet_sweep`` robustness section / ``benchmarks.stochastic_smoke``)
+merges into ``solver_stats.json`` and holds the stochastic layer's
+contracts on the fixed golden burst grid:
+
+  * one-dispatch invariant: all K scenarios share ONE trimmed shape by
+    the fan-out's construction, so the batched solve must issue at
+    most one compiled LP dispatch per bucket (``lp_dispatches <=
+    buckets``);
+  * every scenario lane converged to tolerance;
+  * robust-cost bracket: the CVaR-selected fleet costs at least the
+    per-scenario mean protocol cost (buying for a distribution is
+    never cheaper than the average scenario's own plan on this grid)
+    and at most the elementwise-max fleet (the zero-overload upper
+    bracket in the candidate menu);
+  * tail-risk separation: the CVaR-selected fleet's worst-scenario
+    overload is STRICTLY lower than the expected-cost-only fleet's —
+    the whole point of carrying the CVaR term through selection on a
+    heavy-tailed burst grid;
+  * determinism vs the committed golden (only when the run used the
+    golden K): same forecast + seed => the same frontier, fleet by
+    fleet and number by number (scenario fan-out, LP rounding, and
+    selection are all deterministic; numeric fields get ``--tol``
+    relative slack for cross-platform rounding).
+
+Exit code 0 on pass, 1 on regression — wired as a CI step right after
+the service gate.  Regenerate the baseline intentionally with
+
+    python -m benchmarks.stochastic_smoke > results/golden/stochastic.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# frontier/summary fields pinned against the golden blob (beyond the
+# structural invariants, which hold at any K)
+_PINNED = ("fleet", "fleet_cost", "expected_fleet",
+           "expected_fleet_cost", "mean_scenario_cost",
+           "worst_scenario_cost", "max_fleet_cost", "mean_overload",
+           "cvar_overload", "worst_overload",
+           "expected_fleet_worst_overload")
+
+
+def _close(a, b, tol: float) -> bool:
+    if isinstance(a, list) or isinstance(b, list):
+        return (isinstance(a, list) and isinstance(b, list)
+                and len(a) == len(b)
+                and all(_close(x, y, tol) for x, y in zip(a, b)))
+    if isinstance(a, float) or isinstance(b, float):
+        return abs(float(a) - float(b)) <= tol * max(
+            1.0, abs(float(a)), abs(float(b)))
+    return a == b
+
+
+def check(cur: dict, base: dict | None, tol: float = 1e-6) -> list[str]:
+    """Returns the list of regression messages (empty == gate passes)."""
+    errs = []
+    if cur["lp_dispatches"] > cur["buckets"]:
+        errs.append(
+            f"one-dispatch invariant broken: {cur['lp_dispatches']} LP "
+            f"dispatch(es) for {cur['buckets']} bucket(s) — all K "
+            f"scenarios share one trimmed shape, so the batched solve "
+            f"must coalesce them")
+    if cur["converged_frac"] < 1.0:
+        errs.append(
+            f"unconverged scenario lanes: converged_frac == "
+            f"{cur['converged_frac']:.4f} < 1.0")
+    if cur["fleet_cost"] < cur["mean_scenario_cost"] - tol:
+        errs.append(
+            f"robust fleet cost {cur['fleet_cost']} fell below the "
+            f"mean per-scenario cost {cur['mean_scenario_cost']} — "
+            f"selection is under-buying the distribution")
+    if cur["fleet_cost"] > cur["max_fleet_cost"] + tol:
+        errs.append(
+            f"robust fleet cost {cur['fleet_cost']} exceeds the "
+            f"elementwise-max fleet {cur['max_fleet_cost']} — the "
+            f"zero-overload candidate should have won instead")
+    if not cur["worst_overload"] < cur["expected_fleet_worst_overload"]:
+        errs.append(
+            f"tail-risk separation lost: CVaR-selected worst overload "
+            f"{cur['worst_overload']} is not strictly below the "
+            f"expected-cost-only fleet's "
+            f"{cur['expected_fleet_worst_overload']} on the golden "
+            f"burst grid")
+    if base is None:
+        return errs
+    if cur["K"] != base["K"]:
+        errs.append(
+            f"# frontier diff skipped: run used K={cur['K']}, golden "
+            f"is K={base['K']} (structural invariants still checked)")
+        return errs
+    for key in _PINNED:
+        if not _close(cur[key], base[key], tol):
+            errs.append(
+                f"golden drift: {key} == {cur[key]!r} != committed "
+                f"{base[key]!r} (same forecast + seed must reproduce "
+                f"the frontier exactly; regenerate the golden only "
+                f"for intentional changes)")
+    if len(cur["frontier"]) != len(base["frontier"]):
+        errs.append(
+            f"frontier changed shape: {len(cur['frontier'])} rows vs "
+            f"golden {len(base['frontier'])}")
+    else:
+        for i, (c, b) in enumerate(zip(cur["frontier"],
+                                       base["frontier"])):
+            for key in sorted(set(c) | set(b)):
+                if not _close(c.get(key), b.get(key), tol):
+                    errs.append(
+                        f"golden drift: frontier[{i}].{key} == "
+                        f"{c.get(key)!r} != committed {b.get(key)!r}")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="solver_stats.json from this run")
+    ap.add_argument("baseline",
+                    help="committed results/golden/stochastic.json")
+    ap.add_argument("--tol", type=float, default=1e-6,
+                    help="relative tolerance on numeric golden fields "
+                         "(default 1e-6 — cross-platform rounding "
+                         "only; the pipeline is deterministic)")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        cur = json.load(f).get("stochastic")
+    if cur is None:
+        print("FAIL: no 'stochastic' key in current solver_stats.json "
+              "— run benchmarks.run --only fleet_sweep (the robustness "
+              "section writes it)", file=sys.stderr)
+        return 1
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    errs = [e for e in check(cur, base, args.tol)
+            if not e.startswith("#")]
+    print(f"stochastic gate: K={cur['K']}, {cur['lp_dispatches']} LP "
+          f"dispatch(es) / {cur['buckets']} bucket(s), robust fleet "
+          f"{cur['fleet']} (cost {cur['fleet_cost']}, worst overload "
+          f"{cur['worst_overload']}) vs expected-only "
+          f"{cur['expected_fleet']} (cost {cur['expected_fleet_cost']}, "
+          f"worst overload {cur['expected_fleet_worst_overload']})")
+    if errs:
+        for e in errs:
+            print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    print("stochastic gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

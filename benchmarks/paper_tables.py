@@ -353,7 +353,8 @@ def local_search_beyond(scale="default", lp="pdhg", placement="batched",
 
 
 def fleet_sweep(scale="default", lp="pdhg", placement="batched",
-                   lp_tol=None, lp_max_iters=None, buckets=None):
+                   lp_tol=None, lp_max_iters=None, buckets=None,
+                   scenarios=None):
     """The batched engine's headline: LP + placement phases of a ragged
     Table-I-style sweep grid.  The LP phase runs as one fused padded
     solve vs the per-instance loop (which pays a fresh JIT compile per
@@ -378,7 +379,15 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
     sweep — and reports iterations-to-tolerance, restarts, and final KKT
     residuals (the ``_solver_stats`` blob ``run.py`` writes as
     ``solver_stats.json``, which the CI convergence gate diffs against
-    ``results/golden/solver_stats.json``)."""
+    ``results/golden/solver_stats.json``).
+
+    The robustness section runs the fixed golden burst grid through
+    the stochastic layer (``benchmarks.stochastic_smoke``: K-scenario
+    fan-out, one batched dispatch, CVaR selection) and reports the
+    robust-vs-expected fleet columns; the blob rides under the
+    ``stochastic`` key of ``solver_stats.json`` for the
+    ``check_stochastic`` gate (``scenarios`` = K, default the golden
+    K)."""
     import jax
 
     from repro.core import (pack_problems, place_many, solve_lp_many,
@@ -585,6 +594,16 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
             abs(r - b) / b for b, r in zip(gcost_b, gcost_r)), 2),
     }
 
+    # --- stochastic robustness on the golden burst grid --------------
+    # the fixed K-scenario fan-out + CVaR selection smoke
+    # (benchmarks.stochastic_smoke): like the ruiz gate grid above, the
+    # forecast is pinned at every --scale because check_stochastic
+    # diffs the frontier against results/golden/stochastic.json; only
+    # K moves (benchmarks.run --scenarios)
+    from benchmarks.stochastic_smoke import stochastic_smoke
+
+    stochastic_stats = stochastic_smoke(scenarios)
+
     solver_stats = {
         "grid": {"B": len(problems), "shapes": shapes, "seeds": seeds,
                  "scale": scale},
@@ -609,6 +628,7 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
         "cost_drift_max_pct": round(drift_max_pct, 2),
         "scaling": scaling_stats,
         "pipeline": pipeline_stats,
+        "stochastic": stochastic_stats,
     }
     return [{
         "figure": "fleet_sweep(beyond)", "B": len(problems),
@@ -670,6 +690,16 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
             100 * scaling_stats["median_iter_reduction"], 1),
         "pipeline_dispatches": pipeline_stats["dispatches"],
         "pipeline_costs_identical": pipeline_stats["costs_identical"],
+        # stochastic robustness (repro.stochastic on the golden burst
+        # grid): the CVaR-selected fleet vs expected-cost-only
+        # selection, all K scenarios in one batched dispatch
+        "stochastic_k": stochastic_stats["K"],
+        "stochastic_dispatches": stochastic_stats["lp_dispatches"],
+        "robust_fleet_cost": stochastic_stats["fleet_cost"],
+        "robust_worst_overload": stochastic_stats["worst_overload"],
+        "expected_fleet_cost": stochastic_stats["expected_fleet_cost"],
+        "expected_worst_overload": stochastic_stats[
+            "expected_fleet_worst_overload"],
         "_solver_stats": solver_stats,
     }]
 

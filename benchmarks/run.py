@@ -4,7 +4,7 @@
                              [--lp pdhg|highs]
                              [--placement batched|loop]
                              [--lp-tol 5e-3] [--lp-max-iters 4000]
-                             [--buckets 4]
+                             [--buckets 4] [--scenarios 64]
                              [--out results/paper]
 
 Prints ``table,key=value,...`` CSV rows; writes JSON per table.  With the
@@ -66,6 +66,13 @@ def main(argv=None) -> None:
                          "planner in the fleet_sweep bucketing section "
                          "(default: per-scale); 1 forces legacy "
                          "single-bucket packing")
+    ap.add_argument("--scenarios", type=int, default=None,
+                    help="K of the stochastic robustness section in "
+                         "fleet_sweep (benchmarks.stochastic_smoke's "
+                         "golden burst grid; default: the committed "
+                         "golden K) — the blob lands under the "
+                         "'stochastic' key of <out>/solver_stats.json "
+                         "for benchmarks.check_stochastic")
     ap.add_argument("--serve-trace", action="store_true",
                     help="also replay the serving-loop smoke trace "
                          "(benchmarks.serve_smoke: paired warm/cold "
@@ -93,6 +100,8 @@ def main(argv=None) -> None:
         kwargs = {}
         if "buckets" in inspect.signature(fn).parameters:
             kwargs["buckets"] = args.buckets
+        if "scenarios" in inspect.signature(fn).parameters:
+            kwargs["scenarios"] = args.scenarios
         rows = fn(scale=args.scale, lp=args.lp, placement=args.placement,
                   lp_tol=args.lp_tol, lp_max_iters=args.lp_max_iters,
                   **kwargs)

@@ -227,7 +227,10 @@ class SweepConfig:
     group size must divide the instance count so every scanned group
     stacks to one shape).  ``devices`` additionally shards the batch
     dim across that many local devices via ``shard_map`` (None = no
-    sharding; the group size must divide by it).
+    sharding; the group size must divide by it, and the count is
+    validated against ``jax.local_device_count()`` at config time —
+    single-device CPU hosts fail HERE with a clear error instead of
+    deep inside the shard_map dispatch).
 
     warm_start and max_buckets > 1 are mutually exclusive: the warm
     chain packs every group to one common shape so primal/dual states
@@ -298,6 +301,20 @@ class SweepConfig:
         if self.devices is not None and self.devices < 1:
             raise ValueError(
                 f"devices must be >= 1 or None, got {self.devices!r}")
+        if self.devices is not None:
+            import jax
+
+            avail = jax.local_device_count()
+            if self.devices > avail:
+                raise ValueError(
+                    f"SweepConfig(devices={self.devices}) but only "
+                    f"{avail} local JAX device(s) are visible: the "
+                    f"shard_map sweep pipeline places one batch shard "
+                    f"per device, so the config would fail at dispatch "
+                    f"time with a cryptic mesh error.  Use devices<="
+                    f"{avail}, or (CPU hosts) set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count=N before "
+                    f"importing jax to expose N host devices")
 
 
 # --- shape-bucketed packing planner ----------------------------------------
@@ -820,6 +837,51 @@ class FleetEngine:
                 results[i] = r
             stats.extend(st)
         return results, stats
+
+    def solve_scenarios(self, problems, init: PDHGState | None = None):
+        """Same-shape scenario group: ONE batched LP dispatch for K
+        instances sharing one trimmed ``(n, m, D, T')`` shape.
+
+        This is the Monte-Carlo fan-out entry (``repro.stochastic``):
+        K scenario instances drawn from one demand forecast differ
+        only in their demand vectors, so they already share a padded
+        shape — the bucket planner has nothing to decide and every
+        lane belongs in the same dispatch.  The shape is validated
+        eagerly (a mixed-shape group raises, naming the shapes) and
+        the planner is bypassed, so the K-lane solve issues exactly
+        one compiled dispatch regardless of ``SweepConfig.max_buckets``
+        (``shard_size`` still bounds the dispatch if set).  Returns
+        ``(results, stats)`` like :meth:`solve`.
+
+        >>> from repro.workload import SyntheticSpec, synthetic_instance
+        >>> fleet = [synthetic_instance(SyntheticSpec(n=8, m=2, D=2,
+        ...                                           T=6, seed=0))] * 2
+        >>> eng = FleetEngine(solver=SolverConfig(tol=1e-2, iters=400))
+        >>> results, stats = eng.solve_scenarios(fleet)
+        >>> len(results), results[0].mapping.shape
+        (2, (8,))
+        """
+        if self.sweep.warm_start is not None:
+            raise ValueError(
+                "solve_scenarios conflicts with SweepConfig.warm_start: "
+                "a scenario group is one same-shape batch solved in a "
+                "single dispatch, not a grid-adjacent sweep chain; use "
+                "a SweepConfig without warm_start")
+        trimmed = self._trimmed(problems)
+        if not trimmed:
+            raise ValueError("solve_scenarios needs at least one instance")
+        shapes = {(t.n, t.m, t.D, t.T) for t in trimmed}
+        if len(shapes) > 1:
+            raise ValueError(
+                f"solve_scenarios needs every trimmed instance on ONE "
+                f"(n, m, D, T') shape (that is what makes the group a "
+                f"single batched dispatch), got {sorted(shapes)}; fan "
+                f"scenarios out of one forecast base "
+                f"(repro.stochastic.fan_out) or pad them yourself")
+        batch = problems if isinstance(problems, ProblemBatch) \
+            else pack_problems(trimmed, assume_trimmed=True)
+        bucket = Bucket(indices=tuple(range(batch.B)), batch=batch)
+        return self._solve_bucket(bucket, init=init)
 
     def _trimmed(self, problems) -> list[Problem]:
         if isinstance(problems, ProblemBatch):

@@ -2,12 +2,16 @@
 capacity-planning layer, as four subcommands over one config surface:
 
     python -m repro.launch.rightsize plan    [--algo lp-map-f]
+                                             [--scenarios K --cvar-alpha A]
     python -m repro.launch.rightsize compare
     python -m repro.launch.rightsize fleet   [-n 8] [--placement compiled]
     python -m repro.launch.rightsize serve   [--trace gct] [--requests 200]
 
 ``plan`` purchases a minimum-cost fleet for the LM-job schedule and
-prints the placement; ``compare`` runs all four paper algorithms plus
+prints the placement (with ``--scenarios K`` it continues into the
+stochastic layer: K-scenario fan-out, one batched dispatch, CVaR
+frontier — docs/stochastic.md); ``compare`` runs all four paper
+algorithms plus
 the timeline-agnostic lower bound (§VI-F); ``fleet`` evaluates N
 demand-scaled what-if scenarios through ONE ``FleetEngine`` session;
 ``serve`` replays an arrival trace through the long-lived
@@ -61,6 +65,24 @@ def configs_from_flags(args) -> dict:
                              pipeline=args.pipeline,
                              devices=args.devices),
     }
+
+
+def stochastic_from_flags(args):
+    """Map the ``plan`` subcommand's stochastic flags onto a
+    ``StochasticConfig`` (the CVaR selection knobs; the forecast
+    channels ride separately on ``--load-sigma``/``--burst-prob``).
+    Lives next to ``configs_from_flags`` for the same reason: one
+    place where flag spellings meet config fields."""
+    from repro.stochastic import StochasticConfig
+
+    return StochasticConfig(
+        scenarios=args.scenarios,
+        seed=args.seed,
+        cvar_alpha=args.cvar_alpha,
+        cvar_lambda=args.cvar_lambda,
+        recfg_weight=args.recfg_cost,
+        algo=args.algo,
+    )
 
 
 def _shared_flags() -> argparse.ArgumentParser:
@@ -117,9 +139,48 @@ def _load_problem(args):
     return problem, tasks
 
 
+def _plan_stochastic(args, problem, current):
+    """``plan --scenarios K``: fan the job fleet's point forecast into
+    K scenarios (one batched dispatch) and print the CVaR frontier,
+    the chosen robust fleet, and the expected-cost-only comparison.
+    ``current`` (the deterministic point plan) anchors the Eva-style
+    ``--recfg-cost`` reconfiguration term."""
+    from repro.stochastic import DemandForecast, plan_stochastic
+
+    forecast = DemandForecast(base=problem,
+                              load_sigma=args.load_sigma,
+                              burst_prob=args.burst_prob)
+    engine = FleetEngine(**configs_from_flags(args), algos=(args.algo,))
+    res = plan_stochastic(forecast, stochastic_from_flags(args),
+                          engine=engine, current_fleet=current)
+    print(f"== stochastic plan ({res.K} scenarios, {res.lp_dispatches} "
+          f"LP dispatch(es), alpha={args.cvar_alpha}, "
+          f"lambda={args.cvar_lambda}) ==")
+    names = problem.node_types.names
+    fmt = lambda F: ", ".join(  # noqa: E731
+        f"{c} x {names[b]}" for b, c in enumerate(F) if c) or "(empty)"
+    print(f"  robust fleet:   {fmt(res.fleet)} "
+          f"(${res.fleet_cost*24:,.2f}/day, worst-scenario overload "
+          f"${res.worst_overload*24:,.2f}/day)")
+    print(f"  expected-only:  {fmt(res.expected_fleet)} "
+          f"(${res.expected_fleet_cost*24:,.2f}/day, worst-scenario "
+          f"overload ${res.expected_overload.max()*24:,.2f}/day)")
+    print(f"\n{'alpha':>6s} {'lambda':>7s} {'$/day':>10s} "
+          f"{'cvar ov':>9s} {'worst ov':>9s}  fleet")
+    for row in res.frontier:
+        print(f"{row['alpha']:6.2f} {row['lambda']:7.2f} "
+              f"{row['fleet_cost']*24:10,.2f} "
+              f"{row['cvar_overload']*24:9,.2f} "
+              f"{row['worst_overload']*24:9,.2f}  {row['fleet']}")
+    return res
+
+
 def cmd_plan(args):
     """One fleet plan with one algorithm; the mapping LP runs through
-    the flag-configured engine (``rightsize`` consumes its result)."""
+    the flag-configured engine (``rightsize`` consumes its result).
+    With ``--scenarios K`` the point plan becomes the *current* fleet
+    and planning continues stochastically (forecast fan-out + CVaR
+    selection, docs/stochastic.md)."""
     problem, tasks = _load_problem(args)
     trimmed, _ = trim_timeline(problem)
     lp_result = None
@@ -145,6 +206,9 @@ def cmd_plan(args):
             f"{t['name']}[{t['start']:02d}-{t['end']:02d}h]"
             for t in by_node[node])
         print(f"  node{node} ({trimmed.node_types.names[b]}): {names}")
+    if args.scenarios:
+        print()
+        return _plan_stochastic(args, problem, per_type)
     return sol
 
 
@@ -258,6 +322,25 @@ def run(argv=None):
     p = sub.add_parser("plan", parents=[shared],
                        help="purchase one fleet plan and print it")
     p.add_argument("--algo", default="lp-map-f")
+    p.add_argument("--scenarios", type=int, default=0, metavar="K",
+                   help="also plan stochastically: fan the forecast "
+                        "into K scenarios (one batched dispatch) and "
+                        "print the CVaR frontier (0 = off)")
+    p.add_argument("--seed", type=int, default=0,
+                   help="scenario fan-out seed")
+    p.add_argument("--cvar-alpha", type=float, default=0.9,
+                   help="CVaR tail level (StochasticConfig.cvar_alpha)")
+    p.add_argument("--cvar-lambda", type=float, default=1.0,
+                   help="CVaR term weight (StochasticConfig.cvar_lambda)")
+    p.add_argument("--recfg-cost", type=float, default=0.0,
+                   help="Eva-style reconfiguration weight against the "
+                        "point plan (StochasticConfig.recfg_weight)")
+    p.add_argument("--load-sigma", type=float, default=0.15,
+                   help="forecast scenario-wide load sigma "
+                        "(DemandForecast.load_sigma)")
+    p.add_argument("--burst-prob", type=float, default=0.05,
+                   help="forecast per-task burst probability "
+                        "(DemandForecast.burst_prob)")
     p.set_defaults(func=cmd_plan)
 
     p = sub.add_parser("compare", parents=[shared],

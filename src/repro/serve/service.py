@@ -36,6 +36,10 @@ The loop is hardened for unattended operation:
     poisoning every subsequent tick; the rest of the tick's fleets are
     unaffected.  Requests are folded one at a time, so the poison item
     is identified exactly and already-folded prefixes still serve.
+  * **Pre-provisioning** — ``preprovision(fleet)`` routes the fleet's
+    current task set through the stochastic layer (K-scenario fan-out
+    + CVaR selection, ``repro.stochastic``) and adopts growth-only
+    burst headroom, logged as a ``scope='preprovision'`` ScaleEvent.
   * **Checkpointing** — ``snapshot(path)`` / ``restore(path, engine)``
     persist every fleet's state (including the warm ``PDHGState``
     chain), the pending queue, and the telemetry counters, so a
@@ -670,6 +674,45 @@ class RightsizingService:
                 break
             n += 1
         return n
+
+    # -- stochastic pre-provisioning -----------------------------------
+
+    def preprovision(self, fleet: str, forecast=None, config=None):
+        """Buy burst headroom ahead of demand: fan the fleet's current
+        task set (or a caller-supplied ``DemandForecast``) into K
+        scenarios, CVaR-select a robust fleet (``repro.stochastic``,
+        one batched dispatch), and adopt ``max(current plan, robust)``.
+
+        Growth-only by design — releases stay owned by the flag-gated
+        scale-in loop, so pre-provisioning can never fight the cooldown
+        or payback checks.  The adoption is logged as a
+        ``scope='preprovision'`` ScaleEvent; the full
+        ``StochasticResult`` (frontier, per-scenario overloads) is
+        returned for telemetry.  The fleet's *current plan* anchors the
+        Eva-style reconfiguration term, so a ``config`` with
+        ``recfg_weight > 0`` biases selection toward fleets near what
+        is already deployed."""
+        from repro.stochastic import (DemandForecast, StochasticConfig,
+                                      plan_stochastic)
+
+        st = self._fleets[fleet]
+        if forecast is None:
+            forecast = DemandForecast(base=st.problem)
+        if config is None:
+            config = StochasticConfig(scenarios=16)
+        current = (st.plan if st.plan is not None
+                   else np.zeros(st.problem.m, dtype=np.int64))
+        res = plan_stochastic(forecast, config, engine=self.engine,
+                              current_fleet=current)
+        adopted = np.maximum(current, res.fleet)
+        cost_before = st.plan_cost
+        st.plan = adopted
+        st.plan_cost = float(adopted @ st.problem.node_types.cost)
+        self.events.append(ScaleEvent(
+            tick=self._tick, fleet=fleet, scope="preprovision",
+            cost_before=cost_before, cost_after=st.plan_cost,
+            checks=()))
+        return res
 
     # -- checkpoint / recovery -----------------------------------------
 

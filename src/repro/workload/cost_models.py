@@ -26,7 +26,11 @@ def heterogeneous_cost(
     rng: np.random.Generator | None = None,
     coeff_range: tuple[float, float] = (0.3, 1.0),
 ) -> np.ndarray:
-    rng = rng or np.random.default_rng(0)
+    # deterministic default: no rng -> a fixed-seed generator, so the
+    # coefficients are reproducible and global NumPy state is untouched
+    # (callers that want per-instance coefficients pass their own rng,
+    # e.g. synthetic_instance threads its spec-seeded generator here)
+    rng = rng if rng is not None else np.random.default_rng(0)
     c = rng.uniform(*coeff_range, size=cap.shape[1])
     return (c[None, :] * cap**e).sum(axis=1)
 

@@ -115,10 +115,22 @@ def gct_like_instance(
     seed: int = 0,
     cost_model: str = "homogeneous",
     e: float = 1.0,
+    rng: np.random.Generator | None = None,
 ) -> Problem:
-    """Paper protocol: sample n tasks and m node-types from the pool."""
+    """Paper protocol: sample n tasks and m node-types from the pool.
+
+    Sampling is bit-reproducible: all randomness flows from ONE
+    explicit source — ``rng`` when given, else a fresh
+    ``np.random.default_rng(seed)`` — so the same seed always yields
+    the same instance (the scenario fan-out in ``repro.stochastic``
+    and the trace generators in ``repro.serve.trace`` rely on this).
+    Passing ``rng`` advances the caller's generator in place (draw
+    several distinct instances from one stream); passing ``seed``
+    never touches global NumPy state.
+    """
     pool = gct_pool()
-    rng = np.random.default_rng(seed)
+    if rng is None:
+        rng = np.random.default_rng(seed)
     ti = rng.choice(len(pool["dem"]), size=min(n, len(pool["dem"])),
                     replace=False)
     mi = rng.choice(len(pool["cap"]), size=min(m, len(pool["cap"])),

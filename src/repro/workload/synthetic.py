@@ -34,8 +34,19 @@ class SyntheticSpec:
     seed: int = 0
 
 
-def synthetic_instance(spec: SyntheticSpec = SyntheticSpec()) -> Problem:
-    rng = np.random.default_rng(spec.seed)
+def synthetic_instance(spec: SyntheticSpec = SyntheticSpec(),
+                       rng: np.random.Generator | None = None) -> Problem:
+    """Draw one Table-I instance from ``spec``.
+
+    Bit-reproducible seed plumbing: every draw (capacities, the
+    heterogeneous cost coefficients, demands, spans) comes from ONE
+    explicit generator — ``rng`` when given, else a fresh
+    ``np.random.default_rng(spec.seed)`` — so the same spec always
+    yields the same instance and global NumPy state is never touched.
+    Pass ``rng`` to draw several instances from one stream.
+    """
+    if rng is None:
+        rng = np.random.default_rng(spec.seed)
     cap = rng.uniform(*spec.capacity, size=(spec.m, spec.D))
     if spec.cost_model == "homogeneous":
         cost = homogeneous_cost(cap)
