@@ -1,0 +1,180 @@
+"""Constraint-planning CI gate.
+
+    python -m benchmarks.check_constraints
+
+Holds the three contracts of the constraint layer
+(``repro.core.constraints`` + ``repro.core.checker``, see
+docs/constraints.md):
+
+  * **oracle-clean smoke grid** — a fixed grid of synthetic instances
+    with active constraint sets (deadlines, affinity merges,
+    anti-affinity spreads, exclusive tasks, malleable widths) solved
+    end-to-end by ``rightsize`` produces plans with ZERO violations
+    from the independent brute-force checker;
+  * **vacuous parity vs the committed golden** — attaching
+    ``TaskConstraints.vacuous`` to the golden ``evaluate_many`` grid
+    must reproduce ``results/golden/evaluate_many.json`` within the
+    golden tolerance: the identity fast path may not perturb a single
+    protocol number;
+  * **engine agreement under active constraints** — the looped
+    ``two_phase``, the numpy lockstep ``place_many``, and the
+    compiled stepper place the LOWERED instances bit-identically.
+
+Exit code 0 on pass, 1 on violation — wired as a CI step right after
+the convergence gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+from repro.core import (
+    TaskConstraints,
+    check_plan,
+    evaluate_many,
+    expand_solution,
+    lower_constraints,
+    pack_problems,
+    penalty_map,
+    place_many,
+    rightsize,
+    trim_timeline,
+    two_phase,
+)
+from repro.workload import (
+    SyntheticSpec,
+    sweep_specs,
+    synthetic_batch,
+    synthetic_instance,
+)
+
+GOLDEN = pathlib.Path(__file__).resolve().parent.parent \
+    / "results" / "golden" / "evaluate_many.json"
+
+# same tolerance as tests/test_golden.py: the LP-side numbers ride on
+# fp32 XLA reductions; real regressions move costs by whole node prices
+REL = 1e-5
+
+
+def _smoke_grid():
+    """Deterministic constrained instances: strongest candidate set
+    first, weakened when lowering rejects it (mirrors the property
+    suite's generator); the exclusive-only fallback always lowers."""
+    out = []
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        p = synthetic_instance(SyntheticSpec(
+            n=18 + 4 * seed, m=3, D=2, T=12, seed=seed))
+        pool = list(rng.permutation(p.n))
+        dl = {u: int(rng.integers(int(p.end[u]), p.T))
+              for u in (int(pool.pop()) for _ in range(2))}
+        wide = int(pool.pop())
+        candidates = [
+            dict(deadlines=dl, affinity={"aff": [int(pool[0]),
+                                                 int(pool[1])]},
+                 anti_affinity={"anti": [int(pool[2]), int(pool[3])]},
+                 exclusive=[int(pool[4])], widths={wide: (3, 0.2)}),
+            dict(deadlines=dl,
+                 anti_affinity={"anti": [int(pool[2]), int(pool[3])]},
+                 exclusive=[int(pool[4])]),
+            dict(exclusive=[0]),
+        ]
+        for cand in candidates:
+            c = TaskConstraints.from_groups(p.n, **cand)
+            q = dataclasses.replace(p, constraints=c)
+            try:
+                low = lower_constraints(q)
+            except ValueError:
+                continue
+            out.append((q, low))
+            break
+    return out
+
+
+def check_oracle_smoke() -> list[str]:
+    errs, active = [], 0
+    for q, low in _smoke_grid():
+        active += not low.identity
+        violations = check_plan(q, rightsize(q))
+        for v in violations:
+            errs.append(f"seed grid instance n={q.n}: {v}")
+    if active < 4:
+        errs.append(
+            f"smoke grid degenerated: only {active} instances carry "
+            f"active constraints — the gate is not exercising lowering")
+    return errs
+
+
+def check_vacuous_parity(golden: dict) -> list[str]:
+    errs = []
+    specs = sweep_specs(SyntheticSpec(n=60, m=4, D=3, T=16), seeds=2,
+                        n=(40, 60, 80))
+    problems = [dataclasses.replace(
+        p, constraints=TaskConstraints.vacuous(p.n))
+        for p in synthetic_batch(specs)]
+    entries = evaluate_many(problems, lp_iters=golden["lp_iters"])
+    if len(entries) != len(golden["entries"]):
+        return [f"grid size drifted: {len(entries)} entries vs "
+                f"{len(golden['entries'])} in the golden"]
+    for i, (got, ref) in enumerate(zip(entries, golden["entries"])):
+        for algo, cost in ref["costs"].items():
+            g = got["costs"][algo]
+            if abs(g - cost) > REL * max(1.0, abs(cost)):
+                errs.append(
+                    f"vacuous constraints perturbed entry {i} "
+                    f"{algo}: {g} vs golden {cost} — the identity "
+                    f"fast path must leave the pipeline untouched")
+    return errs
+
+
+def check_engine_agreement() -> list[str]:
+    errs = []
+    for q, low in _smoke_grid():
+        t, _ = trim_timeline(low.lowered)
+        mp = penalty_map(t, "avg")
+        want = two_phase(t, mp)
+        batch = pack_problems([t], assume_trimmed=True)
+        for placement in ("lockstep", "compiled"):
+            got = place_many(batch, [mp], placement=placement)[0]
+            if not (np.array_equal(got.node_type, want.node_type)
+                    and np.array_equal(got.assign, want.assign)):
+                errs.append(
+                    f"{placement} engine diverged from two_phase on a "
+                    f"constrained instance (n={q.n})")
+        for v in check_plan(q, expand_solution(low, want)):
+            errs.append(f"expanded two_phase plan (n={q.n}): {v}")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--golden", type=pathlib.Path, default=GOLDEN,
+                    help="golden evaluate_many snapshot to diff against")
+    args = ap.parse_args(argv)
+    golden = json.loads(args.golden.read_text())
+
+    errs = []
+    for name, fn in (("oracle smoke grid", check_oracle_smoke),
+                     ("vacuous golden parity",
+                      lambda: check_vacuous_parity(golden)),
+                     ("engine agreement", check_engine_agreement)):
+        found = fn()
+        errs.extend(found)
+        print(("FAIL" if found else "ok  ") + f" {name}")
+    if errs:
+        print(f"\nconstraints gate: {len(errs)} violation(s)")
+        for e in errs:
+            print(f"  - {e}")
+        return 1
+    print("constraints gate: all green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

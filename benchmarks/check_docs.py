@@ -40,6 +40,8 @@ AUDITED_MODULES = (
     "repro.core.place_batch",
     "repro.core.place_step",
     "repro.core.batch",
+    "repro.core.constraints",
+    "repro.core.checker",
     "repro.kernels.ops",
     "repro.serve.config",
     "repro.serve.queue",

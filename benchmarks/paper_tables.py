@@ -387,7 +387,14 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
     robust-vs-expected fleet columns; the blob rides under the
     ``stochastic`` key of ``solver_stats.json`` for the
     ``check_stochastic`` gate (``scenarios`` = K, default the golden
-    K)."""
+    K).
+
+    The constraint section replays the ``check_constraints`` smoke
+    grid (deadlines, affinity, anti-affinity, exclusivity, malleable
+    widths): every plan must be clean under the independent
+    feasibility oracle and the three placement engines identical on
+    the lowered instances; the blob rides under the ``constraints``
+    key of ``solver_stats.json``."""
     import jax
 
     from repro.core import (pack_problems, place_many, solve_lp_many,
@@ -604,6 +611,22 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
 
     stochastic_stats = stochastic_smoke(scenarios)
 
+    # --- constraint planning on the fixed smoke grid -----------------
+    # the check_constraints gate grid (deadlines, affinity merges,
+    # anti-affinity, exclusivity, widths): plans must be oracle-clean
+    # and the three placement engines identical under lowering
+    from benchmarks.check_constraints import (_smoke_grid,
+                                              check_engine_agreement,
+                                              check_oracle_smoke)
+
+    cgrid = _smoke_grid()
+    constraint_stats = {
+        "instances": len(cgrid),
+        "active": int(sum(not low.identity for _, low in cgrid)),
+        "oracle_violations": len(check_oracle_smoke()),
+        "engines_identical": not check_engine_agreement(),
+    }
+
     solver_stats = {
         "grid": {"B": len(problems), "shapes": shapes, "seeds": seeds,
                  "scale": scale},
@@ -629,6 +652,7 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
         "scaling": scaling_stats,
         "pipeline": pipeline_stats,
         "stochastic": stochastic_stats,
+        "constraints": constraint_stats,
     }
     return [{
         "figure": "fleet_sweep(beyond)", "B": len(problems),
@@ -700,6 +724,13 @@ def fleet_sweep(scale="default", lp="pdhg", placement="batched",
         "expected_fleet_cost": stochastic_stats["expected_fleet_cost"],
         "expected_worst_overload": stochastic_stats[
             "expected_fleet_worst_overload"],
+        # constraint planning (repro.core.constraints + checker) on
+        # the check_constraints smoke grid
+        "constrained_instances": constraint_stats["active"],
+        "constraint_oracle_violations":
+            constraint_stats["oracle_violations"],
+        "constraint_engines_identical":
+            constraint_stats["engines_identical"],
         "_solver_stats": solver_stats,
     }]
 

@@ -15,6 +15,9 @@ Public API (the surface docs/architecture.md documents):
     penalty_map, lp_map, solve_lp       — mapping strategies
     two_phase                           — per-instance placement engine
     lp_lowerbound, congestion_lowerbound, no_timeline_lowerbound
+    TaskConstraints, lower_constraints,
+    expand_solution, Lowering           — hard constraints + lowering
+    check_plan, assert_feasible         — independent feasibility oracle
 """
 
 from .problem import (
@@ -23,7 +26,16 @@ from .problem import (
     trim_timeline,
     active_mask,
     feasible_types,
+    require_lowered,
 )
+from .constraints import (
+    TaskConstraints,
+    Lowering,
+    lower_constraints,
+    expand_solution,
+    width_duration,
+)
+from .checker import FeasibilityError, assert_feasible, check_plan
 from .solution import Solution, verify
 from .penalty import (
     penalty_map,
@@ -68,4 +80,7 @@ __all__ = [
     "pack_problems", "solve_lp_many", "solve_lp_sweep", "place_many",
     "FleetEngine", "FleetResult", "PackPlan", "PlacementConfig",
     "SolverConfig", "SweepConfig", "plan_buckets",
+    "require_lowered", "TaskConstraints", "Lowering",
+    "lower_constraints", "expand_solution", "width_duration",
+    "FeasibilityError", "assert_feasible", "check_plan",
 ]

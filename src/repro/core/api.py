@@ -29,6 +29,7 @@ from __future__ import annotations
 import time
 import warnings
 
+from .constraints import expand_solution, lower_constraints
 from .problem import Problem, trim_timeline
 from .penalty import penalty_map
 from .placement import two_phase, FIT_POLICIES
@@ -73,8 +74,15 @@ def rightsize(
     lp_result=None,
 ) -> Solution:
     """Solve one instance with one algorithm, taking the best fit policy
-    (and, for PenaltyMap, the best relative-demand kind) per the paper."""
-    trimmed, _ = trim_timeline(problem)
+    (and, for PenaltyMap, the best relative-demand kind) per the paper.
+
+    Constrained instances (``problem.constraints``) are lowered first
+    (``repro.core.constraints``); the returned solution is expanded
+    back to original task rows, and under ``check=True`` it is also
+    validated against the ORIGINAL constraint semantics by the
+    independent ``repro.core.checker`` oracle."""
+    low = lower_constraints(problem)
+    trimmed, _ = trim_timeline(low.lowered)
     t0 = time.perf_counter()
     local_search = algo.endswith("+ls")
     if local_search:
@@ -99,6 +107,11 @@ def rightsize(
     best.meta["wall_s"] = time.perf_counter() - t0
     if check:
         verify(trimmed, best)
+    best = expand_solution(low, best)
+    if check and not low.identity:
+        from .checker import assert_feasible
+
+        assert_feasible(problem, best)
     return best
 
 
@@ -140,8 +153,14 @@ def evaluate(problem: Problem, algos=ALGORITHMS, backend: str = "numpy",
     (adaptive restarted engine; ``lp_iters`` caps the worst case).
 
     Returns {algo: cost, ..., 'lb': lowerbound, 'normalized': {algo: cost/lb}}.
+
+    Constrained instances are lowered first; costs (and the lower
+    bound) are those of the lowered instance, whose affinity rows
+    reserve peak-over-hull demand — a conservative relaxation, so the
+    reported ``lb`` may exceed the true constrained optimum's LP bound.
     """
-    trimmed, _ = trim_timeline(problem)
+    low = lower_constraints(problem)
+    trimmed, _ = trim_timeline(low.lowered)
     lp_result, lb = _solve_lp_for(trimmed, lp_solver, lp_iters, lp_tol)
     return _protocol_entry(trimmed, lp_result, lb, algos, backend)
 

@@ -87,7 +87,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .lp_pdhg import PDHGResult, PDHGState, SolveStats
-from .problem import Problem, feasible_types, trim_timeline
+from .problem import (Problem, feasible_types, require_lowered,
+                      trim_timeline)
 
 __all__ = ["ProblemBatch", "pack_problems", "solve_lp_many",
            "solve_lp_sweep", "PAD_COST", "DEFAULT_TOL",
@@ -231,6 +232,7 @@ def pack_problems(problems, pad_to=None,
     for p in problems:
         if p.n == 0:
             raise ValueError("cannot batch an empty instance")
+        require_lowered(p, "pack_problems")
         trimmed.append(p if assume_trimmed else trim_timeline(p)[0])
     n = max(t.n for t in trimmed)
     m = max(t.m for t in trimmed)

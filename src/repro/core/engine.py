@@ -54,6 +54,7 @@ from .lp_pdhg import PDHGResult, PDHGState, SolveStats
 from .penalty import penalty_map
 from .place_batch import place_many
 from .placement import FIT_POLICIES, two_phase
+from .constraints import expand_solution, lower_constraints
 from .problem import Problem, trim_timeline
 from .solution import Solution, verify
 
@@ -732,13 +733,16 @@ class FleetEngine:
 
         A pre-packed ``ProblemBatch`` passes through as one bucket (its
         padding is taken as-is, so bucketing never re-pads a batch the
-        caller already laid out)."""
+        caller already laid out).  Constrained instances are lowered
+        here (``repro.core.constraints``) before trimming, so every
+        downstream phase sees plain instances."""
         if isinstance(problems, ProblemBatch):
             bucket = Bucket(indices=tuple(range(problems.B)),
                             batch=problems)
             return PackPlan(buckets=(bucket,), n_instances=problems.B,
                             cells_single=bucket.cells)
-        trimmed = [trim_timeline(p)[0] for p in problems]
+        trimmed = [trim_timeline(lower_constraints(p).lowered)[0]
+                   for p in problems]
         if not trimmed:
             raise ValueError("FleetEngine.pack needs at least one instance")
         parts = plan_buckets(trimmed, max_buckets=self.sweep.max_buckets,
@@ -890,7 +894,8 @@ class FleetEngine:
             raise ValueError(
                 "warm-started sweeps take the problem sequence itself "
                 "(grid-adjacent order), not a PackPlan")
-        return [trim_timeline(p)[0] for p in problems]
+        return [trim_timeline(lower_constraints(p).lowered)[0]
+                for p in problems]
 
     def _solve_warm(self, trimmed: list[Problem]):
         """Warm-started sweep chain over consecutive groups of
@@ -922,7 +927,13 @@ class FleetEngine:
               filling: bool | None = None) -> list[Solution]:
         """One placement pass of given mappings under
         ``self.placement`` (fit/filling overridable per call; fit
-        defaults to the config's policy, or 'first' under 'best')."""
+        defaults to the config's policy, or 'first' under 'best').
+
+        Constrained instances are lowered first and the returned
+        solutions expanded back to original task rows (resolved widths
+        ride ``meta['widths']``); ``mappings[b]`` must therefore align
+        with the LOWERED rows — which is exactly what :meth:`solve`
+        produces for the same problems."""
         if isinstance(problems, PackPlan):
             raise ValueError(
                 "place() takes a problem sequence or a ProblemBatch "
@@ -931,17 +942,26 @@ class FleetEngine:
         fit = fit if fit is not None else (
             "first" if cfg.fit == "best" else cfg.fit)
         filling = cfg.filling if filling is None else filling
+        lows = None
+        if not isinstance(problems, ProblemBatch):
+            lows = [lower_constraints(p) for p in problems]
+            problems = [low.lowered for low in lows]
         if cfg.engine == "loop":
             trimmed = self._trimmed(problems)
-            return [two_phase(t, mp, fit=fit, filling=filling,
+            sols = [two_phase(t, mp, fit=fit, filling=filling,
                               backend=cfg.backend)
                     for t, mp in zip(trimmed, mappings)]
-        batch = problems if isinstance(problems, ProblemBatch) \
-            else pack_problems(self._trimmed(problems),
-                               assume_trimmed=True)
-        return place_many(batch, mappings, fit=fit, filling=filling,
-                          backend=cfg.backend,
-                          placement=_ENGINE_STEPPER[cfg.engine])
+        else:
+            batch = problems if isinstance(problems, ProblemBatch) \
+                else pack_problems(self._trimmed(problems),
+                                   assume_trimmed=True)
+            sols = place_many(batch, mappings, fit=fit, filling=filling,
+                              backend=cfg.backend,
+                              placement=_ENGINE_STEPPER[cfg.engine])
+        if lows is not None:
+            sols = [expand_solution(low, s)
+                    for low, s in zip(lows, sols)]
+        return sols
 
     def _evaluate_bucket(self, batch: ProblemBatch, lp_results,
                          tels: list | None = None):

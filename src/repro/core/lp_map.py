@@ -25,7 +25,8 @@ import numpy as np
 import scipy.sparse as sp
 from scipy.optimize import linprog
 
-from .problem import Problem, active_mask, feasible_types, trim_timeline
+from .problem import (Problem, active_mask, feasible_types,
+                      require_lowered, trim_timeline)
 
 __all__ = ["LPResult", "solve_lp", "lp_map"]
 
@@ -119,7 +120,11 @@ def solve_lp(
     method='auto' uses dual simplex for small LPs and interior-point (with
     crossover) for large ones — ~4x faster at GCT scale, measured.
     ``max_slots`` optionally subsamples constraint slots (sound relaxation).
+
+    Constrained instances must be lowered first: lowered virtual
+    dimensions become ordinary congestion rows here.
     """
+    require_lowered(problem, "solve_lp")
     n, m = problem.n, problem.m
     if n == 0:
         return LPResult(

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .problem import Problem
+from .problem import Problem, require_lowered
 from .solution import EPS, Solution
 from . import penalty as penalty_mod
 
@@ -118,7 +118,12 @@ def two_phase(
     sum_d cap(B,d)/cost(B); after packing a type's own (still unplaced)
     tasks, the remaining tasks of *later* types piggy-back into this type's
     leftover holes in increasing h_avg(u|B) order (fill only — no purchase).
+
+    Constrained instances must be lowered first (``require_lowered``);
+    lowered virtual dimensions place through the same feasibility
+    checks as real resources.
     """
+    require_lowered(problem, "two_phase")
     if fit not in FIT_POLICIES:
         raise ValueError(f"fit must be one of {FIT_POLICIES}")
     nt = problem.node_types

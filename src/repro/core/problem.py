@@ -22,6 +22,7 @@ __all__ = [
     "trim_timeline",
     "active_mask",
     "feasible_types",
+    "require_lowered",
 ]
 
 
@@ -78,6 +79,11 @@ class Problem:
     end:   (n,)   0-based inclusive end slots, end >= start.
     node_types: the catalogue.
     T: number of timeslots (end < T).
+    constraints: optional ``repro.core.constraints.TaskConstraints``
+        (deadlines, affinity groups, exclusivity, malleable width).
+        The LP/placement stack consumes only *lowered* instances —
+        ``lower_constraints`` turns a constrained Problem into a plain
+        one; ``require_lowered`` guards the solver entry points.
     """
 
     dem: np.ndarray
@@ -85,6 +91,7 @@ class Problem:
     end: np.ndarray
     node_types: NodeTypes
     T: int
+    constraints: object | None = None
 
     def __post_init__(self):
         dem = np.asarray(self.dem, dtype=np.float64)
@@ -106,6 +113,11 @@ class Problem:
             raise ValueError("end must be >= start")
         if (dem < 0).any():
             raise ValueError("demands must be non-negative")
+        if self.constraints is not None and self.constraints.n != n:
+            raise ValueError(
+                f"constraints cover {self.constraints.n} tasks but the "
+                f"instance has {n}"
+            )
 
     @property
     def n(self) -> int:
@@ -144,6 +156,26 @@ def active_mask(problem: Problem, slots: Sequence[int] | None = None) -> np.ndar
     return (problem.start[:, None] <= t[None, :]) & (t[None, :] <= problem.end[:, None])
 
 
+def require_lowered(problem: Problem, where: str) -> None:
+    """Reject instances carrying *active* constraints.
+
+    The LP and placement stack understands only plain instances; a
+    constrained ``Problem`` must go through
+    ``repro.core.constraints.lower_constraints`` first (the public
+    entry points — ``rightsize``, ``evaluate``, ``FleetEngine``, the
+    serving loop — all do).  Vacuous constraints are harmless and
+    pass through.
+    """
+    c = problem.constraints
+    if c is not None and not c.is_vacuous():
+        raise ValueError(
+            f"{where} received a Problem with active constraints; lower "
+            f"it first with repro.core.constraints.lower_constraints "
+            f"(the rightsize/evaluate/FleetEngine entry points do this "
+            f"automatically)"
+        )
+
+
 def trim_timeline(problem: Problem) -> tuple[Problem, np.ndarray]:
     """Timeline trimming (paper §II): keep only task start slots.
 
@@ -155,7 +187,12 @@ def trim_timeline(problem: Problem) -> tuple[Problem, np.ndarray]:
     Task spans are remapped to trimmed coordinates: the new start is the
     rank of the old start (which is always a kept slot) and the new end is
     the rank of the last kept slot <= old end.
+
+    Active constraints must be lowered before trimming (ValueError
+    otherwise); vacuous constraints are silently dropped — the trimmed
+    instance is plain either way.
     """
+    require_lowered(problem, "trim_timeline")
     if problem.n == 0:
         return problem, np.zeros(0, dtype=np.int64)
     kept = np.unique(problem.start)

@@ -15,6 +15,15 @@ Layout: rem is passed transposed as (T, D, N) so nodes ride the 128-lane
 axis and timeslots the 8-sublane axis; D is a small static inner loop.
 Grid: (N/Nb, T/Tb) with the T axis innermost, accumulating into the (Nb,)
 outputs while they stay VMEM-resident.
+
+The kernel is generic over D, which is the constraint contract: the
+lowering in ``repro.core.constraints`` appends virtual unit-capacity
+dimensions (a shared exclusivity column with a δ=1e-6 sliver demand for
+non-exclusive rows, one column per anti-affinity group) and they ride
+the same feasibility-margin reduction as real resources.  The margins
+involved (0 vs δ−EPS ≈ 9e-7, accumulations of δ) sit far above f32
+resolution at these O(1) magnitudes, so the f32 kernel path stays
+bit-consistent with the f64 numpy path on the feasibility *decision*.
 """
 
 from __future__ import annotations

@@ -2,6 +2,11 @@
 
 These are the ground truth every kernel test compares against
 (``assert_allclose`` over shape/dtype sweeps).
+
+Like the kernels, every oracle is generic over the trailing feature
+dimensions (D/K): lowered virtual constraint columns from
+``repro.core.constraints`` (exclusivity, anti-affinity) are ordinary
+capacity dimensions here and need no special casing.
 """
 
 from __future__ import annotations

@@ -14,8 +14,8 @@ so ``shed`` implements the SLO admission policy: when the backlog
 exceeds ``ServiceConfig.max_pending``, queued ``replan`` requests — and
 ONLY ``replan``s, which carry no perturbation — are dropped with a
 structured ``ShedEvent``.  State-changing kinds (``admit``/``arrive``/
-``depart``/``burst``) are never shed: dropping one would silently fork
-the client's view of the fleet from the service's.
+``depart``/``burst``/``constrain``) are never shed: dropping one would
+silently fork the client's view of the fleet from the service's.
 """
 
 from __future__ import annotations
@@ -29,11 +29,11 @@ import numpy as np
 __all__ = ["Request", "PendingRequest", "AdmissionQueue", "ShedEvent",
            "KINDS", "NEVER_SHED_KINDS"]
 
-KINDS = ("admit", "arrive", "depart", "burst", "replan")
+KINDS = ("admit", "arrive", "depart", "burst", "constrain", "replan")
 
 # state-changing kinds: shedding one would desynchronize the client's
 # fleet view, so the shed policy may only ever drop 'replan's
-NEVER_SHED_KINDS = ("admit", "arrive", "depart", "burst")
+NEVER_SHED_KINDS = ("admit", "arrive", "depart", "burst", "constrain")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +48,12 @@ class Request:
     kind='depart' — remove tasks by id (``ids``).
     kind='burst'  — scale the demands of tasks ``ids`` by ``factor``
         (clamped to the fleet's largest per-dimension capacity).
+    kind='constrain' — attach hard constraints to tasks ``ids``: any of
+        ``affinity``/``anti_affinity`` (named groups, created on first
+        use), ``exclusive`` (whole-node isolation), ``deadline`` (an
+        inclusive finish slot).  Constraint semantics live in
+        ``repro.core.constraints``; ids must reference live tasks
+        (unknown ids raise at apply time, like depart/burst).
     kind='replan' — no perturbation; force a re-solve.
 
     ``deadline_s`` is an optional per-request SLO: the seconds the
@@ -79,6 +85,10 @@ class Request:
     ids: tuple[int, ...] | None = None
     factor: float | None = None
     deadline_s: float | None = None
+    affinity: str | None = None
+    anti_affinity: str | None = None
+    exclusive: bool | None = None
+    deadline: int | None = None
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -107,6 +117,18 @@ class Request:
             raise ValueError(
                 f"burst requests need ids and factor, got "
                 f"factor={self.factor!r}")
+        if self.kind == "constrain":
+            if not self.ids:
+                raise ValueError(
+                    "constrain requests need a non-empty ids tuple")
+            if (self.affinity is None and self.anti_affinity is None
+                    and self.exclusive is None and self.deadline is None):
+                raise ValueError(
+                    "constrain requests need at least one of affinity/"
+                    "anti_affinity/exclusive/deadline")
+        if self.deadline is not None and self.deadline < 0:
+            raise ValueError(
+                f"deadline must be a slot index >= 0, got {self.deadline}")
         # 'not inf > 0' is False, so a bare positivity test would let
         # factor=inf through and _fit_demands would zero the demands
         if self.factor is not None and not (

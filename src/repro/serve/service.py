@@ -55,6 +55,9 @@ import time
 import numpy as np
 
 from repro.core.batch import pack_problems
+from repro.core.checker import assert_feasible
+from repro.core.constraints import (TaskConstraints, expand_solution,
+                                    lower_constraints)
 from repro.core.engine import (FleetEngine, SolverConfig, SweepConfig,
                                plan_buckets)
 from repro.core.lp_pdhg import PDHGState
@@ -286,6 +289,7 @@ class RightsizingService:
                 f"fleet {req.fleet!r} got a {req.kind!r} request "
                 f"before being admitted")
         cap = problem.node_types.cap
+        constraints = problem.constraints
         if req.kind == "arrive":
             dem = self._fit_demands(req.dem, cap)
             k = dem.shape[0]
@@ -297,7 +301,9 @@ class RightsizingService:
                 end=np.concatenate([
                     problem.end,
                     np.asarray(req.end, dtype=np.int64)]),
-                node_types=problem.node_types, T=problem.T)
+                node_types=problem.node_types, T=problem.T,
+                constraints=(None if constraints is None
+                             else constraints.extend(k)))
             ids = np.concatenate([
                 ids, np.arange(next_id, next_id + k, dtype=np.int64)])
             next_id += k
@@ -309,7 +315,9 @@ class RightsizingService:
             problem = Problem(
                 dem=problem.dem[keep], start=problem.start[keep],
                 end=problem.end[keep],
-                node_types=problem.node_types, T=problem.T)
+                node_types=problem.node_types, T=problem.T,
+                constraints=(None if constraints is None
+                             else constraints.take(keep)))
             ids = ids[keep]
         elif req.kind == "burst":
             hit = np.isin(ids, self._known_ids(req, ids))
@@ -317,7 +325,24 @@ class RightsizingService:
             dem[hit] = self._fit_demands(dem[hit] * req.factor, cap)
             problem = Problem(
                 dem=dem, start=problem.start, end=problem.end,
-                node_types=problem.node_types, T=problem.T)
+                node_types=problem.node_types, T=problem.T,
+                constraints=constraints)
+        elif req.kind == "constrain":
+            hit = np.isin(ids, self._known_ids(req, ids))
+            c = (TaskConstraints.vacuous(problem.n)
+                 if constraints is None else constraints)
+            c = c.constrain(np.flatnonzero(hit), affinity=req.affinity,
+                            anti_affinity=req.anti_affinity,
+                            exclusive=req.exclusive,
+                            deadline=req.deadline)
+            problem = Problem(
+                dem=problem.dem, start=problem.start, end=problem.end,
+                node_types=problem.node_types, T=problem.T,
+                constraints=c)
+            # validate eagerly: an unmeetable deadline, a contradictory
+            # group, or an unplaceable merged row fails HERE (poison
+            # isolation path) instead of poisoning the whole tick solve
+            lower_constraints(problem)
         # 'replan' applies no perturbation
         return problem, ids, next_id
 
@@ -473,8 +498,9 @@ class RightsizingService:
                 # nothing new to solve: the fleet's only requests this
                 # tick failed (or a fresh fleet's admit did)
                 continue
-            trimmed, kept = trim_timeline(problem)
-            proposals[name] = (problem, ids, next_id, trimmed, kept)
+            low = lower_constraints(problem)
+            trimmed, kept = trim_timeline(low.lowered)
+            proposals[name] = (problem, ids, next_id, trimmed, kept, low)
             served_items[name] = applied
         names = list(proposals)
         if not names:
@@ -516,9 +542,17 @@ class RightsizingService:
         y0 = np.zeros((batch.B, batch.Tp, batch.m, batch.D), np.float32)
         modes, etas, omegas = [], [], []
         for lane, name in enumerate(chosen):
-            _, ids, _, trimmed, kept = proposals[name]
-            mode, eta, om = self._lane_init(self._fleets.get(name), ids,
-                                            trimmed, kept, x0, y0, lane)
+            _, ids, _, trimmed, kept, low = proposals[name]
+            st_l = self._fleets.get(name)
+            if not low.identity:
+                # constrained lanes always cold-start: the lowered rows
+                # (merged groups, virtual dims) no longer align with the
+                # per-task-id warm state
+                mode, eta, om = (("admit" if st_l is None else "cold"),
+                                 None, None)
+            else:
+                mode, eta, om = self._lane_init(st_l, ids, trimmed,
+                                                kept, x0, y0, lane)
             modes.append(mode)
             etas.append(eta)
             omegas.append(om)
@@ -556,7 +590,7 @@ class RightsizingService:
         served: list[PendingRequest] = []
         committed = [False] * len(chosen)
         for lane, name in enumerate(chosen):
-            problem, ids, next_id, trimmed, kept = proposals[name]
+            problem, ids, next_id, trimmed, kept, low = proposals[name]
             st = self._fleets.get(name)
             sol = best[lane]
             failure: Exception | None = None
@@ -573,6 +607,11 @@ class RightsizingService:
             elif self.engine.placement.check:
                 try:
                     verify(trimmed, sol)
+                    if not low.identity:
+                        # independent second opinion: the expanded plan
+                        # against the ORIGINAL constraint semantics
+                        assert_feasible(problem,
+                                        expand_solution(low, sol))
                 except AssertionError as e:
                     failure = e
             if failure is not None:
@@ -607,8 +646,12 @@ class RightsizingService:
             if decision.scaled_in:
                 st.last_scale_in_tick = self._tick
             st.plan, st.plan_cost = decision.adopted, decision.cost
-            st.solution = sol
-            if lane_state is not None and lane_state[lane] is not None:
+            st.solution = expand_solution(low, sol)
+            if not low.identity:
+                # lowered-row state would misalign with task ids on a
+                # later (possibly unconstrained) tick — never store it
+                st.warm = None
+            elif lane_state is not None and lane_state[lane] is not None:
                 state, local = lane_state[lane]
                 st.warm = _LaneState(
                     x=np.array(state.x[local, :trimmed.n, :trimmed.m]),

@@ -40,6 +40,7 @@ import time
 
 import numpy as np
 
+from repro.core.constraints import TaskConstraints
 from repro.core.problem import NodeTypes, Problem
 from repro.core.solution import Solution
 
@@ -72,6 +73,10 @@ def _request_entry(req: Request, arrays: dict, prefix: str) -> dict:
     entry = {"fleet": req.fleet, "kind": req.kind, "T": req.T,
              "ids": None if req.ids is None else [int(i) for i in req.ids],
              "factor": req.factor, "deadline_s": req.deadline_s,
+             "affinity": req.affinity,
+             "anti_affinity": req.anti_affinity,
+             "exclusive": req.exclusive,
+             "deadline": req.deadline,
              "has_arrays": req.dem is not None,
              "has_node_types": req.node_types is not None}
     if req.dem is not None:
@@ -99,7 +104,12 @@ def _request_from(entry: dict, arrays, prefix: str) -> Request:
         node_types=node_types,
         T=None if entry["T"] is None else int(entry["T"]),
         ids=None if entry["ids"] is None else tuple(entry["ids"]),
-        factor=entry["factor"], deadline_s=entry["deadline_s"])
+        factor=entry["factor"], deadline_s=entry["deadline_s"],
+        # .get keeps pre-constraint snapshots restorable
+        affinity=entry.get("affinity"),
+        anti_affinity=entry.get("anti_affinity"),
+        exclusive=entry.get("exclusive"),
+        deadline=entry.get("deadline"))
 
 
 def save_snapshot(service, path: str) -> dict:
@@ -124,10 +134,21 @@ def save_snapshot(service, path: str) -> dict:
             "has_plan": st.plan is not None,
             "has_warm": st.warm is not None,
             "has_solution": st.solution is not None,
+            "has_constraints": p.constraints is not None,
         }
         arrays[f"f{i}/dem"] = p.dem
         arrays[f"f{i}/start"] = p.start
         arrays[f"f{i}/end"] = p.end
+        if p.constraints is not None:
+            c = p.constraints
+            entry["affinity_names"] = list(c.affinity_names)
+            entry["anti_names"] = list(c.anti_names)
+            arrays[f"f{i}/c_deadline"] = c.deadline
+            arrays[f"f{i}/c_affinity"] = c.affinity
+            arrays[f"f{i}/c_anti"] = c.anti_affinity
+            arrays[f"f{i}/c_exclusive"] = c.exclusive
+            arrays[f"f{i}/c_max_width"] = c.max_width
+            arrays[f"f{i}/c_serial_frac"] = c.serial_frac
         arrays[f"f{i}/cap"] = p.node_types.cap
         arrays[f"f{i}/cost"] = p.node_types.cost
         arrays[f"f{i}/ids"] = st.ids
@@ -252,10 +273,22 @@ def restore_service(path: str, engine=None, config=None, faults=None):
         node_types = NodeTypes(cap=arrays[f"f{i}/cap"],
                                cost=arrays[f"f{i}/cost"],
                                names=tuple(entry["node_names"]))
+        constraints = None
+        if entry.get("has_constraints"):
+            constraints = TaskConstraints(
+                deadline=arrays[f"f{i}/c_deadline"],
+                affinity=arrays[f"f{i}/c_affinity"],
+                anti_affinity=arrays[f"f{i}/c_anti"],
+                exclusive=arrays[f"f{i}/c_exclusive"],
+                max_width=arrays[f"f{i}/c_max_width"],
+                serial_frac=arrays[f"f{i}/c_serial_frac"],
+                affinity_names=tuple(entry["affinity_names"]),
+                anti_names=tuple(entry["anti_names"]))
         problem = Problem(dem=arrays[f"f{i}/dem"],
                           start=arrays[f"f{i}/start"],
                           end=arrays[f"f{i}/end"],
-                          node_types=node_types, T=int(entry["T"]))
+                          node_types=node_types, T=int(entry["T"]),
+                          constraints=constraints)
         st = _FleetState(problem=problem, ids=arrays[f"f{i}/ids"],
                          next_id=int(entry["next_id"]))
         st.plan_cost = float(entry["plan_cost"])

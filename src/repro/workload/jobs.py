@@ -24,7 +24,7 @@ import os
 
 import numpy as np
 
-from repro.core import NodeTypes, Problem
+from repro.core import NodeTypes, Problem, TaskConstraints
 
 __all__ = ["TPU_SKUS", "Job", "DEFAULT_SCHEDULE", "jobs_from_dryrun",
            "fleet_problem", "BUILTIN_DEMANDS"]
@@ -51,11 +51,28 @@ TPU_SKUS = _mk_skus()
 
 @dataclasses.dataclass(frozen=True)
 class Job:
+    """One scheduled workload; optional hard constraints ride along.
+
+    ``deadline_h`` is an inclusive finish hour (train jobs that must
+    complete before the business day); ``exclusive`` reserves whole
+    slices (isolation-sensitive serving); ``affinity``/``anti_affinity``
+    are named groups (co-locate a tower of services / spread replicas);
+    ``max_width``/``serial_frac`` allow widening a deadlined job per the
+    Amdahl law.  Defaults are all vacuous, keeping ``DEFAULT_SCHEDULE``
+    problems byte-stable.
+    """
+
     name: str
     arch: str
     shape: str
     start_h: int
     end_h: int          # inclusive hour slot
+    deadline_h: int | None = None
+    exclusive: bool = False
+    affinity: str | None = None
+    anti_affinity: str | None = None
+    max_width: int = 1
+    serial_frac: float = 1.0
 
 
 # a plausible production day: nightly training, business-hours serving,
@@ -132,8 +149,41 @@ def jobs_from_dryrun(schedule=DEFAULT_SCHEDULE,
                 "start": job.start_h,
                 "end": job.end_h,
                 "source": src,
+                # shards inherit the job's constraints verbatim (a job's
+                # pods share its deadline, isolation, and groups)
+                "deadline": job.deadline_h,
+                "exclusive": job.exclusive,
+                "affinity": job.affinity,
+                "anti_affinity": job.anti_affinity,
+                "max_width": job.max_width,
+                "serial_frac": job.serial_frac,
             })
     return tasks
+
+
+def _constraints_from_tasks(tasks) -> TaskConstraints | None:
+    """``TaskConstraints`` for expanded task dicts, or None when every
+    job carried only the vacuous defaults."""
+    if all(t.get("deadline") is None and not t.get("exclusive")
+           and t.get("affinity") is None and t.get("anti_affinity") is None
+           and t.get("max_width", 1) == 1 for t in tasks):
+        return None
+    deadlines = {i: t["deadline"] for i, t in enumerate(tasks)
+                 if t.get("deadline") is not None}
+    affinity: dict[str, list[int]] = {}
+    anti: dict[str, list[int]] = {}
+    for i, t in enumerate(tasks):
+        if t.get("affinity") is not None:
+            affinity.setdefault(t["affinity"], []).append(i)
+        if t.get("anti_affinity") is not None:
+            anti.setdefault(t["anti_affinity"], []).append(i)
+    widths = {i: (t["max_width"], t.get("serial_frac", 1.0))
+              for i, t in enumerate(tasks) if t.get("max_width", 1) > 1}
+    return TaskConstraints.from_groups(
+        len(tasks), deadlines=deadlines, affinity=affinity,
+        anti_affinity=anti,
+        exclusive=[i for i, t in enumerate(tasks) if t.get("exclusive")],
+        widths=widths)
 
 
 def fleet_problem(schedule=DEFAULT_SCHEDULE,
@@ -143,5 +193,5 @@ def fleet_problem(schedule=DEFAULT_SCHEDULE,
     start = np.array([t["start"] for t in tasks])
     end = np.array([t["end"] for t in tasks])
     problem = Problem(dem=dem, start=start, end=end, node_types=TPU_SKUS,
-                      T=24)
+                      T=24, constraints=_constraints_from_tasks(tasks))
     return problem, tasks

@@ -18,6 +18,7 @@ from repro.core import (
     PlacementConfig,
     SolverConfig,
     SweepConfig,
+    assert_feasible,
     evaluate_many,
     pack_problems,
     place_many,
@@ -341,9 +342,13 @@ class TestPlaceAndBackends:
         looped = FleetEngine(
             placement=PlacementConfig(engine="loop")).place(
                 problems, maps, fit="similarity", filling=True)
-        for a, b in zip(batched, looped):
+        for p, a, b in zip(problems, batched, looped):
             np.testing.assert_array_equal(a.assign, b.assign)
             np.testing.assert_array_equal(a.node_type, b.node_type)
+            # independent oracle on the ORIGINAL (untrimmed) timeline:
+            # assignments are time-coordinate-free, so the checker's
+            # slot-by-slot capacity audit holds there too
+            assert_feasible(p, a)
 
     def test_place_many_rejects_unknown_backend(self):
         problems = _ragged_grid(shapes=2, seeds=1)

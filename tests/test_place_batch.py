@@ -39,6 +39,7 @@ except ImportError:
     HAVE_HYPOTHESIS = False
 
 from repro.core import (  # noqa: E402
+    assert_feasible,
     evaluate_many,
     pack_problems,
     penalty_map,
@@ -123,6 +124,9 @@ class TestPlaceManyProperty:
                     _assert_equal_solutions(got_c, want)
                     assert got.cost(t) == want.cost(t)
                     verify(t, got)
+                    # independent oracle (repro.core.checker): shares
+                    # no code with verify() or the engines
+                    assert_feasible(t, got)
 
 
 class TestPlaceManyFixtures:
@@ -145,6 +149,7 @@ class TestPlaceManyFixtures:
                     want = two_phase(t, mp, fit=fit, filling=filling)
                     _assert_equal_solutions(got, want)
                     verify(t, got)
+                    assert_feasible(t, got)  # independent oracle
 
     def test_mapping_validation(self):
         t, _ = trim_timeline(synthetic_instance(SyntheticSpec(

@@ -14,7 +14,7 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import FleetEngine, SolverConfig
+from repro.core import FleetEngine, SolverConfig, assert_feasible
 from repro.serve import (
     NEVER_SHED_KINDS,
     AdmissionQueue,
@@ -58,6 +58,20 @@ class TestRequestValidation:
     def test_burst_needs_factor(self):
         with pytest.raises(ValueError, match="ids and factor"):
             Request(fleet="a", kind="burst", ids=(1,))
+
+    def test_constrain_needs_ids(self):
+        with pytest.raises(ValueError, match="non-empty ids tuple"):
+            Request(fleet="a", kind="constrain", exclusive=True)
+
+    def test_constrain_needs_a_constraint_field(self):
+        with pytest.raises(ValueError,
+                           match="at least one of affinity"):
+            Request(fleet="a", kind="constrain", ids=(0,))
+
+    def test_constrain_deadline_must_be_nonnegative(self):
+        with pytest.raises(ValueError,
+                           match="deadline must be a slot index >= 0"):
+            Request(fleet="a", kind="constrain", ids=(0,), deadline=-1)
 
     @pytest.mark.parametrize("factor", [float("inf"), float("nan"),
                                         0.0, -2.0])
@@ -282,7 +296,8 @@ class TestServiceLifecycle:
         assert svc.report()["retries"] == 1
 
     @pytest.mark.parametrize("kind,extra", [
-        ("depart", {}), ("burst", {"factor": 1.5})])
+        ("depart", {}), ("burst", {"factor": 1.5}),
+        ("constrain", {"exclusive": True})])
     def test_unknown_ids_raise_instead_of_silent_noop(self, kind, extra):
         # np.isin against ids the fleet never had matches nothing: a
         # client typo must surface as an error, not a no-op re-solve
@@ -295,6 +310,29 @@ class TestServiceLifecycle:
         assert len(svc.quarantined) == 1
         assert "unknown task ids [99]" in svc.quarantined[0].error
         assert svc.fleet("gpu").n_tasks == 4
+
+    def test_constrain_applies_and_plan_passes_oracle(self):
+        svc = _service(shape_quantum=4)
+        _, admit = _admit_request("gpu", n=8, m=3, seed=2)
+        svc.submit(admit)
+        svc.tick()
+        svc.submit(Request(fleet="gpu", kind="constrain", ids=(0, 1),
+                           affinity="tower"))
+        svc.submit(Request(fleet="gpu", kind="constrain", ids=(2,),
+                           exclusive=True))
+        svc.drain()
+        assert not svc.quarantined
+        st = svc._fleets["gpu"]
+        c = st.problem.constraints
+        assert c is not None and "tower" in c.affinity_names
+        assert bool(c.exclusive[2])
+        # the adopted plan reflects the constraints and survives the
+        # independent oracle: the pair shares a node, task 2 is alone
+        sol = st.solution
+        assert sol.meta.get("constrained") is True
+        assert sol.node_type[0] == sol.node_type[1]
+        assert sol.assign[0] == sol.assign[1]
+        assert_feasible(st.problem, sol)
 
     def test_service_sheds_under_pressure_and_reports(self):
         svc = _service(shape_quantum=4, max_pending=2,
@@ -361,15 +399,31 @@ def paired_replay():
     for label, warm in [("warm", True), ("cold", False)]:
         svc = RightsizingService(config=ServiceConfig(warm_start=warm))
         out[label] = replay(svc, list(trace), push_per_tick=12)
+        out[label + "_svc"] = svc
     return out
 
 
 class TestReplayAcceptance:
     def test_one_dispatch_per_tick_end_to_end(self, paired_replay):
-        for rep in paired_replay.values():
+        for label in ("warm", "cold"):
+            rep = paired_replay[label]
             assert rep["requests"] >= 200
             assert rep["dispatches_per_tick"] == 1
             assert rep["converged_frac"] == 1.0
+
+    def test_replay_plans_pass_independent_oracle(self, paired_replay):
+        # second opinion from repro.core.checker: every adopted fleet
+        # plan must satisfy the brute-force feasibility oracle, which
+        # shares no code with the placement engines.  Assignments are
+        # time-coordinate-free, so the audit runs on the ORIGINAL
+        # (untrimmed) fleet problem.
+        for label in ("warm", "cold"):
+            svc = paired_replay[label + "_svc"]
+            assert svc.fleets
+            for name in svc.fleets:
+                st = svc._fleets[name]
+                assert st.solution is not None
+                assert_feasible(st.problem, st.solution)
 
     def test_sustained_throughput_and_latency_reported(self, paired_replay):
         rep = paired_replay["warm"]
